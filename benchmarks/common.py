@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: fast-mode defaults, timing, CSV emission."""
+
+from __future__ import annotations
+
+import os
+import time
+
+FAST = os.environ.get("BENCH_FAST", "1") != "0"
+
+
+def fast_params():
+    """(n_traces, horizon_s, n_apps_per_bucket) for fast vs full runs."""
+    return (3, 1800, 4) if FAST else (10, 7200, None)
+
+
+def emit(name: str, rows: list[dict], t0: float) -> None:
+    """Scaffold contract: ``name,us_per_call,derived`` CSV lines."""
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    for row in rows:
+        derived = ";".join(f"{k}={v}" for k, v in row.items())
+        print(f"{name},{us:.0f},{derived}")
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, t0

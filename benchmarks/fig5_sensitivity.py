@@ -1,0 +1,53 @@
+"""Fig. 5: sensitivity to workload burstiness x FPGA spin-up time."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import report
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim import ratesim
+
+from benchmarks.common import FAST, fast_params
+
+
+def run() -> list[dict]:
+    n_traces, horizon, _ = fast_params()
+    spin_ups = (10.0, 60.0) if FAST else (1.0, 10.0, 60.0, 100.0)
+    biases = (0.55, 0.65, 0.75) if FAST else (0.5, 0.55, 0.6, 0.65, 0.7, 0.75)
+    ref = DEFAULT_FLEET
+    rows = []
+    for spin in spin_ups:
+        fleet = ref.replace(fpga=ref.fpga.replace(spin_up_s=spin))
+        for bias in biases:
+            for label, policy in (("SporkE", "spork"),
+                                  ("CPU-dynamic", "cpu_dynamic"),
+                                  ("FPGA-static", "fpga_static"),
+                                  ("FPGA-dynamic", "fpga_dynamic")):
+                effs, costs = [], []
+                for seed in range(n_traces):
+                    tr = synthetic_trace(seed=seed, bias=bias,
+                                         horizon_s=horizon,
+                                         request_size_s=0.05,
+                                         mean_demand_workers=100.0)
+                    if policy == "fpga_dynamic":
+                        _, tot = ratesim.tune_fpga_dynamic(
+                            tr.counts, tr.request_size_s, fleet)
+                    else:
+                        tot = ratesim.simulate(policy, tr.counts,
+                                               tr.request_size_s, fleet)
+                    # normalize against DEFAULT parameters (paper Fig. 5)
+                    r = report(tot, fleet, reference_fleet=ref)
+                    effs.append(r.energy_efficiency)
+                    costs.append(r.relative_cost)
+                rows.append({"spin_up_s": spin, "bias": bias,
+                             "scheduler": label,
+                             "energy_eff": round(float(np.mean(effs)), 4),
+                             "rel_cost": round(float(np.mean(costs)), 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

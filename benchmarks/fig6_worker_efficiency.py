@@ -1,0 +1,52 @@
+"""Fig. 6: sensitivity to FPGA speedup and busy power draw."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import report
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim import ratesim
+
+from benchmarks.common import fast_params
+
+
+def run() -> list[dict]:
+    n_traces, horizon, _ = fast_params()
+    ref = DEFAULT_FLEET
+    rows = []
+    grid = [("speedup", s, ref.replace(fpga=ref.fpga.replace(speedup=s)))
+            for s in (1.0, 2.0, 4.0)]
+    grid += [("busy_w", w, ref.replace(fpga=ref.fpga.replace(busy_w=w)))
+             for w in (25.0, 50.0, 100.0)]
+    for knob, val, fleet in grid:
+        for label, policy in (("SporkE", "spork"),
+                              ("FPGA-static", "fpga_static"),
+                              ("FPGA-dynamic", "fpga_dynamic"),
+                              ("CPU-dynamic", "cpu_dynamic")):
+            effs, costs, idle = [], [], []
+            for seed in range(n_traces):
+                tr = synthetic_trace(seed=seed, bias=0.6, horizon_s=horizon,
+                                     request_size_s=0.05,
+                                     mean_demand_workers=100.0)
+                if policy == "fpga_dynamic":
+                    _, tot = ratesim.tune_fpga_dynamic(
+                        tr.counts, tr.request_size_s, fleet)
+                else:
+                    tot = ratesim.simulate(policy, tr.counts,
+                                           tr.request_size_s, fleet)
+                r = report(tot, fleet, reference_fleet=ref)
+                effs.append(r.energy_efficiency)
+                costs.append(r.relative_cost)
+                idle.append(tot.fpga_idle_j / max(tot.energy_j, 1e-9))
+            rows.append({knob: val, "scheduler": label,
+                         "energy_eff": round(float(np.mean(effs)), 4),
+                         "rel_cost": round(float(np.mean(costs)), 4),
+                         "idle_energy_frac": round(float(np.mean(idle)), 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

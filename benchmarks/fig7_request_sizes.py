@@ -1,0 +1,47 @@
+"""Fig. 7: sensitivity to request sizes (deadlines = 10x size)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import report
+from repro.core.traces import BUCKETS_S, synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim import ratesim
+
+from benchmarks.common import fast_params
+
+
+def run() -> list[dict]:
+    n_traces, horizon, _ = fast_params()
+    fleet = DEFAULT_FLEET
+    rows = []
+    for bucket, (lo, hi) in BUCKETS_S.items():
+        size = float(np.sqrt(lo * hi))      # geometric mid of the bucket
+        for label, policy in (("SporkE", "spork"),
+                              ("FPGA-static", "fpga_static"),
+                              ("FPGA-dynamic", "fpga_dynamic")):
+            effs, costs = [], []
+            for seed in range(n_traces):
+                tr = synthetic_trace(seed=seed, bias=0.6, horizon_s=horizon,
+                                     request_size_s=size,
+                                     mean_demand_workers=100.0)
+                if policy == "fpga_dynamic":
+                    _, tot = ratesim.tune_fpga_dynamic(
+                        tr.counts, tr.request_size_s, fleet)
+                else:
+                    tot = ratesim.simulate(policy, tr.counts,
+                                           tr.request_size_s, fleet)
+                r = report(tot, fleet)
+                effs.append(r.energy_efficiency)
+                costs.append(r.relative_cost)
+            rows.append({"bucket": bucket, "size_s": round(size, 3),
+                         "scheduler": label,
+                         "energy_eff": round(float(np.mean(effs)), 4),
+                         "rel_cost": round(float(np.mean(costs)), 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,169 @@
+"""Roofline analysis per (arch x shape) on the single-pod production mesh.
+
+Methodology (EXPERIMENTS.md §Roofline):
+  * XLA's HloCostAnalysis counts while-loop bodies ONCE (verified
+    empirically), so scanned-layer costs cannot be read off the full
+    config. Instead we lower depth-reduced variants with every model scan
+    UNROLLED (models.flags.SCAN_UNROLL) at two depths La < Lb, fit
+    x(L) = fixed + slope * L, and extrapolate to the full depth.
+  * Collective bytes come from the post-SPMD HLO census of the same
+    unrolled lowerings (per-device shapes), extrapolated identically.
+  * memory-fit numbers come from the full-depth compile (scan form, the
+    deployable artifact).
+
+Terms per cell (v5e chip constants in launch.mesh):
+    compute_s    = HLO_FLOPs_dev / 197e12
+    memory_s     = HLO_bytes_dev / 819e9
+    collective_s = collective_bytes_dev / 50e9   (per-link ICI)
+plus MODEL_FLOPS = 6*N*D (train; 2*N*D inference, N = active params) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Usage:
+    python -m benchmarks.roofline --collect   # runs the reduced lowerings
+    python -m benchmarks.roofline --report    # prints the table
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.configs.registry import SHAPES, cells, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = Path("results/dryrun")
+OUT = Path("results/roofline.json")
+CHIPS = 256  # single-pod
+
+
+def depth_points(arch: str) -> tuple[int, int]:
+    cfg = get_config(arch, "full")
+    if cfg.family == "hybrid":
+        p = len(cfg.block_pattern)
+        return p, 2 * p
+    if cfg.family == "moe" and cfg.n_dense_layers:
+        return 2, 4
+    return 2, 4
+
+
+def collect(only: list[str] | None = None) -> None:
+    for arch, shape, _ in cells():
+        if only and arch not in only:
+            continue
+        la, lb = depth_points(arch)
+        for L in (la, lb):
+            tag = DRYRUN_DIR / f"{arch}__{shape}__single__L{L}u.json"
+            if tag.exists() and json.loads(tag.read_text()).get("ok"):
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", "single",
+                   "--layers", str(L), "--unroll",
+                   "--out", str(DRYRUN_DIR)]
+            print("collect:", " ".join(cmd[3:]))
+            subprocess.run(cmd, env={**__import__("os").environ,
+                                     "PYTHONPATH": "src"}, check=False)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch, "full")
+    spec = SHAPES[shape]
+    n = cfg.param_count(active_only=True)
+    if spec["kind"] == "train":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 6.0 * n * tokens
+    if spec["kind"] == "prefill":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 2.0 * n * tokens
+    return 2.0 * n * spec["global_batch"]      # decode: one token per seq
+
+
+def _load(tag: str) -> dict | None:
+    p = DRYRUN_DIR / f"{tag}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return rec if rec.get("ok") else None
+
+
+def extrapolate(arch: str, shape: str) -> dict | None:
+    la, lb = depth_points(arch)
+    a = _load(f"{arch}__{shape}__single__L{la}u")
+    b = _load(f"{arch}__{shape}__single__L{lb}u")
+    full = _load(f"{arch}__{shape}__single")
+    if not (a and b):
+        return None
+    L = get_config(arch, "full").n_layers
+
+    def fit(key, getter=lambda r, k: r.get(k, 0.0)):
+        xa, xb = getter(a, key), getter(b, key)
+        slope = (xb - xa) / (lb - la)
+        return max(xa + slope * (L - la), xa)
+
+    coll = lambda r, _: r["collectives"].get(
+        "total_bytes_tpu", r["collectives"]["total_bytes"])
+    rec = {
+        "arch": arch, "shape": shape, "n_layers": L,
+        "flops_dev": fit("hlo_flops"),
+        "bytes_dev": fit("hlo_bytes"),
+        "coll_bytes_dev": fit(None, coll),
+        "mem_dev_bytes": (full or b).get("device_bytes_total", 0),
+        "compile_ok_full": bool(full),
+    }
+    rec["compute_s"] = rec["flops_dev"] / PEAK_FLOPS_BF16
+    rec["memory_s"] = rec["bytes_dev"] / HBM_BW
+    rec["collective_s"] = rec["coll_bytes_dev"] / ICI_BW_PER_LINK
+    terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+             "collective": rec["collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    mf = model_flops(arch, shape)
+    rec["model_flops_total"] = mf
+    rec["model_flops_dev"] = mf / CHIPS
+    rec["useful_ratio"] = (rec["model_flops_dev"] / rec["flops_dev"]
+                           if rec["flops_dev"] > 0 else 0.0)
+    # roofline fraction: useful work per second at the bottleneck
+    step_s = max(terms.values())
+    ideal_s = rec["model_flops_dev"] / PEAK_FLOPS_BF16
+    rec["roofline_fraction"] = ideal_s / step_s if step_s > 0 else 0.0
+    return rec
+
+
+def report() -> list[dict]:
+    rows = []
+    for arch, shape, _ in cells():
+        rec = extrapolate(arch, shape)
+        if rec is None:
+            continue
+        rows.append(rec)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def run() -> list[dict]:
+    """Benchmark-runner entry: summarize whatever has been collected."""
+    rows = report()
+    return [{
+        "arch": r["arch"], "shape": r["shape"],
+        "compute_ms": round(r["compute_s"] * 1e3, 3),
+        "memory_ms": round(r["memory_s"] * 1e3, 3),
+        "collective_ms": round(r["collective_s"] * 1e3, 3),
+        "bottleneck": r["bottleneck"],
+        "useful_ratio": round(r["useful_ratio"], 3),
+        "roofline_frac": round(r["roofline_fraction"], 4),
+        "mem_GiB": round(r["mem_dev_bytes"] / 2**30, 2),
+    } for r in rows]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--collect", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--arch", nargs="*", default=None)
+    args = ap.parse_args()
+    if args.collect:
+        collect(args.arch)
+    for row in run():
+        print(row)

@@ -1,0 +1,40 @@
+"""Benchmark harness: one function per paper table/figure + the roofline
+summary. Prints ``name,us_per_call,derived`` CSV lines.
+
+BENCH_FAST=0 for full-size runs (10 traces, 2h horizons, all apps).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_pareto, fig4_spork_vs_mark,
+                            fig5_sensitivity, fig6_worker_efficiency,
+                            fig7_request_sizes, roofline,
+                            table8_production, table9_dispatch)
+    from benchmarks.common import emit
+
+    suites = [
+        ("fig2_pareto", lambda: fig2_pareto.run(pareto=True)),
+        ("table8_production", table8_production.run),
+        ("table9_dispatch", table9_dispatch.run),
+        ("fig4_spork_vs_mark", fig4_spork_vs_mark.run),
+        ("fig5_sensitivity", fig5_sensitivity.run),
+        ("fig6_worker_efficiency", fig6_worker_efficiency.run),
+        ("fig7_request_sizes", fig7_request_sizes.run),
+        ("roofline", roofline.run),
+    ]
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name},0,error={type(e).__name__}:{e}")
+            continue
+        emit(name, rows, t0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Table 8: production-workload stand-ins — all schedulers, both sources.
+
+Azure-like and Alibaba-like app sets (core.traces; the real datasets are
+not redistributable offline — see DESIGN.md §9), short and medium request
+buckets, energy/cost/miss metrics aggregated across apps and normalized
+per §5.1. Spork variants: E (energy), C (cost), B (balanced), + ideal.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import RunTotals, report
+from repro.core.traces import production_like_apps
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim import ratesim
+
+from benchmarks.common import fast_params
+
+SCHEDULERS = [
+    ("CPU-dynamic", "cpu_dynamic", {}),
+    ("FPGA-static", "fpga_static", {}),
+    ("FPGA-dynamic", "fpga_dynamic", {"tuned": True}),
+    ("MArk-ideal", "mark_ideal", {}),
+    ("SporkC", "spork", {"energy_weight": 0.0}),
+    ("SporkB", "spork", {"energy_weight": 0.5}),
+    ("SporkE", "spork", {"energy_weight": 1.0}),
+    ("SporkE-ideal", "spork_ideal", {"energy_weight": 1.0}),
+]
+
+
+def run(buckets=("short", "medium"), sources=("azure", "alibaba")) -> list[dict]:
+    _, horizon, n_apps = fast_params()
+    fleet = DEFAULT_FLEET
+    rows = []
+    for source in sources:
+        for bucket in buckets:
+            try:
+                apps = production_like_apps(source, bucket, seed=1,
+                                            horizon_s=horizon,
+                                            n_apps=n_apps)
+            except ValueError:
+                continue
+            for label, policy, kw in SCHEDULERS:
+                total = RunTotals()
+                misses = 0
+                for tr in apps:
+                    if kw.get("tuned"):
+                        _, tot = ratesim.tune_fpga_dynamic(
+                            tr.counts, tr.request_size_s, fleet)
+                    else:
+                        tot = ratesim.simulate(
+                            policy, tr.counts, tr.request_size_s, fleet,
+                            energy_weight=kw.get("energy_weight", 1.0))
+                    total = total.merge(tot)
+                    misses += tot.deadline_misses
+                r = report(total, fleet)
+                rows.append({
+                    "source": source, "bucket": bucket, "scheduler": label,
+                    "energy_eff": round(r.energy_efficiency, 4),
+                    "rel_cost": round(r.relative_cost, 4),
+                    "miss_rate": round(r.deadline_miss_rate, 6),
+                    "cpu_frac": round(r.cpu_request_fraction, 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,47 @@
+"""Table 9: dispatch-policy ablation under SporkE's allocation logic.
+
+Exact event-driven simulation (per-request semantics are what separate
+the policies); production stand-ins at reduced demand so the DES stays
+tractable (utilization-preserving; documented in DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+from repro.core.metrics import RunTotals, report
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim.events import simulate_events
+
+from benchmarks.common import FAST
+
+
+def run() -> list[dict]:
+    fleet = DEFAULT_FLEET
+    horizon = 900 if FAST else 3600
+    n_apps = 2 if FAST else 5
+    rows = []
+    cases = [("azure-like(short)", 0.68, 0.05),
+             ("azure-like(medium)", 0.68, 0.3),
+             ("alibaba-like(short)", 0.58, 0.05)]
+    for label, bias, size in cases:
+        for disp in ("round_robin", "index_packing", "spork"):
+            total = RunTotals()
+            for app in range(n_apps):
+                tr = synthetic_trace(seed=100 + app, bias=bias,
+                                     horizon_s=horizon, request_size_s=size,
+                                     mean_demand_workers=8.0)
+                arr = tr.arrival_times(seed=7 + app)
+                tot = simulate_events(arr, tr.request_size_s, fleet,
+                                      dispatcher=disp, horizon_s=horizon)
+                total = total.merge(tot)
+            r = report(total, fleet)
+            rows.append({"trace": label, "dispatch": disp,
+                         "energy_eff": round(r.energy_efficiency, 4),
+                         "rel_cost": round(r.relative_cost, 4),
+                         "miss_rate": round(r.deadline_miss_rate, 6)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,37 @@
+"""Reproduce the paper's §3 insight interactively: sweep the energy/cost
+weighting of the optimal hybrid scheduler and print the pareto front at
+two burstiness levels (Fig. 3), plus the homogeneous corner points.
+
+Run:  PYTHONPATH=src python examples/pareto_study.py
+"""
+
+import numpy as np
+
+from benchmarks.fig2_pareto import interval_work
+from repro.core.dp import pareto_front, solve_dp
+from repro.core.metrics import report
+from repro.core.workers import DEFAULT_FLEET
+
+
+def main() -> None:
+    fleet = DEFAULT_FLEET.replace(max_fpgas=2048, max_cpus=10 ** 6)
+    for bias in (0.55, 0.75):
+        W = interval_work(0, bias, 1800)
+        print(f"=== burstiness b={bias} ===")
+        for label, kw in (("CPU-only ", dict(allow_fpga=False)),
+                          ("FPGA-only", dict(allow_cpu=False))):
+            sol = solve_dp(W, fleet, energy_weight=1.0, **kw)
+            r = report(sol.totals, fleet)
+            print(f"  {label}: eff={r.energy_efficiency:.3f} "
+                  f"cost={r.relative_cost:.3f}")
+        print("  hybrid pareto front (w: cost-opt -> energy-opt):")
+        for sol, w in zip(pareto_front(W, fleet),
+                          [0.0] + list(np.geomspace(0.02, 1.0, 9))):
+            r = report(sol.totals, fleet)
+            print(f"    w={w:5.3f} eff={r.energy_efficiency:.3f} "
+                  f"cost={r.relative_cost:.3f} "
+                  f"peak_fpgas={int(sol.y_fpga.max())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Hybrid serving example: Spork schedules a bursty request stream for a
+zoo architecture while a live engine decodes batched requests.
+
+Run:  PYTHONPATH=src python examples/serve_hybrid.py [--arch qwen3-0.6b]
+
+This is the paper's deployment story end-to-end: the router decides WHEN
+accelerator workers spin up/down and WHERE each request runs (meeting
+10x-size deadlines); the engine shows WHAT each accelerator worker
+executes (batched token decoding with a KV cache).
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--objective", default="energy",
+                    choices=["energy", "cost", "balanced"])
+    args = ap.parse_args()
+    import sys
+    sys.argv = ["serve", "--arch", args.arch, "--minutes", "5",
+                "--rate", "30", "--objective", args.objective]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

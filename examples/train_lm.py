@@ -1,0 +1,78 @@
+"""End-to-end training example: a ~100M-parameter dense LM for a few
+hundred steps with checkpoint/restart, on the public training API.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The config is a scaled granite-family model (~100M params). Loss must
+drop substantially from its ~log(V) start; the script resumes from the
+latest checkpoint if re-run (kill it mid-way to see restart work).
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.train.loop import init_train_state, make_train_step
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="granite-100m", family="dense", n_layers=6, d_model=512,
+        n_heads=8, n_kv_heads=4, d_ff=2048, vocab_size=32768,
+        mlp_type="swiglu", q_block=256)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    model = build_model(cfg)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"model: {cfg.name}, {n_params / 1e6:.1f}M params")
+
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=3)
+    step_fn = jax.jit(make_train_step(model, base_lr=6e-4, warmup=20,
+                                      total_steps=args.steps))
+    mgr = CheckpointManager(args.ckpt_dir, every_steps=100)
+
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    start = 0
+    if mgr.latest() is not None:
+        (state,), manifest = mgr.restore((state,))
+        start = manifest["step"]
+        print(f"resumed from step {start}")
+
+    first_loss = None
+    t0 = time.time()
+    for step in range(start, args.steps):
+        state, metrics = step_fn(state, pipe.batch_at(step))
+        loss = float(metrics["loss"])
+        if first_loss is None:
+            first_loss = loss
+        if step % 25 == 0:
+            rate = args.batch * args.seq * (step - start + 1) / (
+                time.time() - t0)
+            print(f"step {step:4d} loss {loss:7.4f} "
+                  f"({rate:,.0f} tok/s)")
+        if mgr.should_save(step):
+            mgr.save(step, (jax.device_get(state),))
+    mgr.save(args.steps, (jax.device_get(state),))
+    print(f"done: loss {first_loss:.3f} -> {loss:.3f} "
+          f"(drop {first_loss - loss:.3f})")
+    assert loss < first_loss - 0.5, "training did not converge"
+
+
+if __name__ == "__main__":
+    main()

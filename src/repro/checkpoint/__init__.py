@@ -1,0 +1,4 @@
+"""Checkpointing: sharded store + manager with elastic restore."""
+
+from repro.checkpoint.store import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

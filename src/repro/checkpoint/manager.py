@@ -1,0 +1,42 @@
+"""Checkpoint manager: periodic saves, retention, resume cursor.
+
+The manager owns the policy (every N steps, keep last K); the train driver
+owns the data. The saved tree bundles (train_state, data_cursor, rng) so a
+restart resumes mid-epoch deterministically (the data pipeline regenerates
+batch t from its step cursor; see data.pipeline).
+"""
+
+from __future__ import annotations
+
+import shutil
+from pathlib import Path
+
+from repro.checkpoint.store import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, every_steps: int = 100,
+                 keep: int = 3):
+        self.dir = Path(directory)
+        self.every = every_steps
+        self.keep = keep
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.every == 0
+
+    def save(self, step: int, tree, metadata: dict | None = None) -> None:
+        save_checkpoint(self.dir, step, tree, metadata)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*") if p.is_dir())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    def latest(self) -> int | None:
+        return latest_step(self.dir)
+
+    def restore(self, tree_like, shardings=None):
+        return restore_checkpoint(self.dir, tree_like, shardings=shardings)

@@ -1,0 +1,116 @@
+"""Sharded checkpoint store: npz payloads + JSON manifest, atomic rename.
+
+Layout:  <dir>/step_<N>/
+             manifest.json     tree structure, shapes, dtypes, metadata
+             shard_<i>.npz     flat arrays (one per host in a real fleet;
+                               one shard here)
+         <dir>/LATEST          -> "step_<N>" (atomically replaced)
+
+Restore is *elastic*: arrays are saved as full logical values (gathered
+per-host shards in a real deployment write disjoint slices; the manifest
+records the slicing), so a restore onto a different mesh simply re-shards
+— the train driver re-applies its own NamedShardings when it puts the
+arrays back on device. Writes go to a tmp dir then os.replace, so a crash
+mid-save never corrupts LATEST.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, tree,
+                    metadata: dict | None = None) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = []
+    for x in leaves:
+        a = np.asarray(x)
+        if a.dtype.kind not in "fiub" or str(a.dtype) == "bfloat16":
+            # npz round-trips ml_dtypes poorly; store widened, manifest
+            # records the logical dtype and restore casts back
+            a = a.astype(np.float32)
+        arrays.append(a)
+
+    tmp = Path(tempfile.mkdtemp(dir=directory, prefix=".tmp_save_"))
+    try:
+        np.savez(tmp / "shard_0.npz",
+                 **{f"a{i}": a for i, a in enumerate(arrays)})
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(arrays),
+            "shapes": [list(a.shape) for a in arrays],
+            "dtypes": [str(a.dtype) for a in arrays],
+            "metadata": metadata or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = directory / f"step_{step}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = directory / ".LATEST.tmp"
+    ptr_tmp.write_text(f"step_{step}")
+    os.replace(ptr_tmp, directory / "LATEST")
+    return final
+
+
+def latest_step(directory: str | Path) -> int | None:
+    ptr = Path(directory) / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    target = Path(directory) / name
+    if not (target / "manifest.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(directory: str | Path, tree_like, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of `tree_like`; optional `shardings`
+    pytree re-shards onto the current (possibly different) mesh."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = directory / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "shard_0.npz") as z:
+        arrays = [z[f"a{i}"] for i in range(manifest["n_leaves"])]
+    leaves, treedef = _flatten(tree_like)
+    if len(leaves) != len(arrays):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, expected {len(leaves)}")
+    out = []
+    for ref, arr in zip(leaves, arrays):
+        if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
+            arr = jax.numpy.asarray(arr).astype(ref.dtype)
+        out.append(arr)
+    restored = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        restored = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), restored, shardings)
+    else:
+        restored = jax.tree_util.tree_map(
+            lambda a, r: jax.device_put(a).astype(r.dtype)
+            if hasattr(r, "dtype") else a, restored, tree_like)
+    return restored, manifest

@@ -1,0 +1,231 @@
+"""Min-plus dynamic-programming equivalent of the Table 3 MILP, in JAX.
+
+Structure (derivation in DESIGN.md): given the FPGA allocation path, the
+optimal CPU allocation and the optimal FPGA/CPU work split have closed
+forms under the paper's parameter ranges, so the MILP collapses to a
+shortest path over FPGA levels j in [0, N] with per-interval stage costs
+and inter-interval churn costs:
+
+    F_t(j) = min_i [ F_{t-1}(i) + trans_t(i, j) ] + stage_t(j)
+
+The min-plus transition is O(N^2) per interval with O(N) inputs — the
+transition matrix is generated on the fly from index arithmetic, never
+materialized in HBM. This is the Pallas `minplus` kernel's job on TPU; the
+pure-jnp path here doubles as its oracle.
+
+Validity guards (asserted): serving marginal work on an allocated FPGA is
+never worse than on a CPU, and holding a CPU idle across an interval is
+never cheaper than re-allocating it. Both hold for every configuration in
+the paper's Table 6; `solve_dp` refuses configurations where they fail
+(those require the exact MILP).
+
+Exactness: equals the MILP optimum when the min-allocation-duration window
+is a single interval (T_s = A_f, the paper's operating point, where the
+Table 3 window constraint is implied by Y >= U). For finer intervals use
+`repro.core.milp`. Verified in tests/test_milp.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import RunTotals
+from .workers import FleetParams
+
+
+@dataclass(frozen=True)
+class DpSolution:
+    y_fpga: np.ndarray           # (T,) optimal FPGA allocation path
+    y_cpu: np.ndarray            # (T,) implied CPU allocations
+    objective: float
+    energy_j: float
+    cost_usd: float
+    totals: RunTotals
+
+
+def _check_structure(fleet: FleetParams) -> None:
+    cpu, fpga, S, Ts = fleet.cpu, fleet.fpga, fleet.S, fleet.T_s
+    if (fpga.busy_w - fpga.idle_w) / S > (cpu.busy_w - cpu.idle_w):
+        raise ValueError(
+            "FPGA-first serving is not optimal for this config; use core.milp")
+    churn = cpu.spin_up_energy_j + cpu.spin_down_energy_j
+    if churn > cpu.idle_w * Ts or cpu.spin_up_s > 0.1 * Ts:
+        raise ValueError(
+            "holding idle CPUs may beat re-allocation for this config; use core.milp")
+
+
+def _stage_tables(W: jnp.ndarray, fleet: FleetParams, n_levels: int,
+                  allow_cpu: bool):
+    """Per-(interval, level) stage energy/cost and implied CPU counts."""
+    Ts, S = fleet.T_s, fleet.S
+    cpu, fpga = fleet.cpu, fleet.fpga
+    j = jnp.arange(n_levels, dtype=jnp.float32)[None, :]        # (1, N)
+    Wt = W[:, None].astype(jnp.float32)                          # (T, 1)
+    cap = j * S * Ts
+    served_f = jnp.minimum(Wt, cap)
+    overflow = Wt - served_f
+    b_f = served_f / (S * Ts)
+    b_c = overflow / Ts
+    y_c = jnp.ceil(b_c - 1e-9)
+    feasible = (overflow <= 1e-9) | allow_cpu
+    big = jnp.float32(1e30)
+    stage_e = (fpga.idle_w * Ts * j + (fpga.busy_w - fpga.idle_w) * Ts * b_f
+               + cpu.idle_w * Ts * y_c + (cpu.busy_w - cpu.idle_w) * Ts * b_c)
+    stage_c = fpga.cost_per_s * Ts * j + cpu.cost_per_s * Ts * y_c
+    stage_e = jnp.where(feasible, stage_e, big)
+    stage_c = jnp.where(feasible, stage_c, big)
+    return stage_e, stage_c, y_c, served_f, overflow
+
+
+def minplus_step_jnp(F: jnp.ndarray, yc_prev: jnp.ndarray, yc_cur: jnp.ndarray,
+                     coeffs: tuple[float, float, float, float]):
+    """One min-plus transition: returns (new_F, argmin_i) for each j.
+
+    coeffs = (alloc_f, dealloc_f, alloc_c, dealloc_c) in objective units.
+    Oracle implementation; the Pallas `minplus` kernel computes the same
+    contraction without materializing the (N, N) matrix.
+    """
+    af, df, ac, dc = coeffs
+    n = F.shape[0]
+    i = jnp.arange(n, dtype=jnp.float32)[:, None]
+    jj = jnp.arange(n, dtype=jnp.float32)[None, :]
+    trans = (af * jnp.maximum(jj - i, 0.0) + df * jnp.maximum(i - jj, 0.0)
+             + ac * jnp.maximum(yc_cur[None, :] - yc_prev[:, None], 0.0)
+             + dc * jnp.maximum(yc_prev[:, None] - yc_cur[None, :], 0.0))
+    m = F[:, None] + trans
+    return jnp.min(m, axis=0), jnp.argmin(m, axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "allow_cpu", "use_kernel"))
+def _dp_forward(W: jnp.ndarray, stage_obj: jnp.ndarray, y_c: jnp.ndarray,
+                coeffs: jnp.ndarray, n_levels: int, allow_cpu: bool,
+                use_kernel: bool = False):
+    af, df, ac, dc = coeffs
+    zero_yc = jnp.zeros((n_levels,), dtype=jnp.float32)
+
+    if use_kernel:
+        from repro.kernels.minplus import ops as minplus_ops
+        step = minplus_ops.minplus_step
+    else:
+        step = minplus_step_jnp
+
+    j = jnp.arange(n_levels, dtype=jnp.float32)
+    # boundary 0: from empty fleet
+    F0 = af * j + ac * y_c[0] + stage_obj[0]
+
+    def body(F, xs):
+        stage, yc_prev, yc_cur = xs
+        newF, arg = step(F, yc_prev, yc_cur, (af, df, ac, dc))
+        return newF + stage, arg
+
+    xs = (stage_obj[1:], y_c[:-1], y_c[1:])
+    F_last, args = jax.lax.scan(body, F0, xs)
+    # closing boundary: dealloc everything
+    end = F_last + df * j + dc * y_c[-1]
+    j_last = jnp.argmin(end)
+
+    def back(carry, arg_row):
+        prev = arg_row[carry]
+        return prev, prev
+
+    _, path_rev = jax.lax.scan(back, j_last.astype(jnp.int32), args, reverse=True)
+    path = jnp.concatenate([path_rev, j_last[None].astype(jnp.int32)])
+    return path, jnp.min(end)
+
+
+def solve_dp(work_cpu_s: np.ndarray, fleet: FleetParams,
+             energy_weight: float = 1.0, allow_cpu: bool = True,
+             allow_fpga: bool = True, n_levels: int | None = None,
+             use_kernel: bool = False) -> DpSolution:
+    """Solve the idealized scheduler by min-plus DP and evaluate the path."""
+    _check_structure(fleet)
+    W = jnp.asarray(work_cpu_s, dtype=jnp.float32)
+    Ts, S = fleet.T_s, fleet.S
+    if n_levels is None:
+        n_levels = int(np.ceil(float(np.max(work_cpu_s)) / (S * Ts))) + 2
+    if not allow_fpga:
+        n_levels = 1
+
+    stage_e, stage_c, y_c, _, _ = _stage_tables(W, fleet, n_levels, allow_cpu)
+    e_unit = fleet.fpga.busy_w * Ts
+    c_unit = fleet.fpga.cost_per_s * Ts
+    we = energy_weight / e_unit if energy_weight > 0 else 0.0
+    wc = (1 - energy_weight) / c_unit if energy_weight < 1 else 0.0
+    if energy_weight >= 1.0:
+        we, wc = 1.0, 0.0
+    if energy_weight <= 0.0:
+        we, wc = 0.0, 1.0
+    stage_obj = we * stage_e + wc * stage_c
+    coeffs = jnp.asarray([
+        we * fleet.fpga.spin_up_energy_j + wc * fleet.fpga.cost_per_s * fleet.fpga.spin_up_s,
+        we * fleet.fpga.spin_down_energy_j,
+        we * fleet.cpu.spin_up_energy_j + wc * fleet.cpu.cost_per_s * fleet.cpu.spin_up_s,
+        we * fleet.cpu.spin_down_energy_j,
+    ], dtype=jnp.float32)
+
+    path, obj = _dp_forward(W, stage_obj, y_c, coeffs, n_levels, allow_cpu,
+                            use_kernel)
+    path = np.asarray(path)
+    return evaluate_path(np.asarray(work_cpu_s), path, fleet,
+                         objective=float(obj))
+
+
+def evaluate_path(W: np.ndarray, y_fpga: np.ndarray, fleet: FleetParams,
+                  objective: float = float("nan")) -> DpSolution:
+    """Exact energy/cost accounting for a given FPGA allocation path
+    (FPGA-first serving, implied CPU allocations). NumPy; used both to
+    evaluate DP output and as the rate-level 'oracle platform' evaluator."""
+    Ts, S = fleet.T_s, fleet.S
+    cpu, fpga = fleet.cpu, fleet.fpga
+    y = np.asarray(y_fpga, dtype=np.float64)
+    W = np.asarray(W, dtype=np.float64)
+    cap = y * S * Ts
+    served_f = np.minimum(W, cap)
+    overflow = W - served_f
+    if np.any(overflow > 1e-6) and fleet.max_cpus == 0:
+        raise ValueError("infeasible path: overflow with no CPUs allowed")
+    b_f = served_f / (S * Ts)
+    b_c = overflow / Ts
+    y_cpu = np.ceil(b_c - 1e-9)
+
+    dy_f = np.diff(np.concatenate([[0.0], y, [0.0]]))
+    dy_c = np.diff(np.concatenate([[0.0], y_cpu, [0.0]]))
+    alloc_f, dealloc_f = np.sum(np.maximum(dy_f, 0)), np.sum(np.maximum(-dy_f, 0))
+    alloc_c, dealloc_c = np.sum(np.maximum(dy_c, 0)), np.sum(np.maximum(-dy_c, 0))
+
+    fpga_busy_j = float(np.sum(b_f) * fpga.busy_w * Ts)
+    fpga_idle_j = float(np.sum(y - b_f) * fpga.idle_w * Ts)
+    cpu_busy_j = float(np.sum(b_c) * cpu.busy_w * Ts)
+    cpu_idle_j = float(np.sum(y_cpu - b_c) * cpu.idle_w * Ts)
+    spin_j = float(alloc_f * fpga.spin_up_energy_j + dealloc_f * fpga.spin_down_energy_j
+                   + alloc_c * cpu.spin_up_energy_j + dealloc_c * cpu.spin_down_energy_j)
+    energy = fpga_busy_j + fpga_idle_j + cpu_busy_j + cpu_idle_j + spin_j
+    cost = float(np.sum(y) * fpga.cost_per_s * Ts + np.sum(y_cpu) * cpu.cost_per_s * Ts
+                 + alloc_f * fpga.cost_per_s * fpga.spin_up_s
+                 + alloc_c * cpu.cost_per_s * cpu.spin_up_s)
+
+    totals = RunTotals(
+        energy_j=energy, cost_usd=cost, work_cpu_s=float(np.sum(W)),
+        work_on_fpga_cpu_s=float(np.sum(served_f)),
+        work_on_cpu_cpu_s=float(np.sum(overflow)),
+        fpga_spinups=int(alloc_f), cpu_spinups=int(alloc_c),
+        fpga_idle_j=fpga_idle_j, fpga_busy_j=fpga_busy_j, cpu_busy_j=cpu_busy_j,
+        spinup_j=spin_j,
+    )
+    return DpSolution(y_fpga=y.astype(int), y_cpu=y_cpu.astype(int),
+                      objective=objective, energy_j=energy, cost_usd=cost,
+                      totals=totals)
+
+
+def pareto_front(work_cpu_s: np.ndarray, fleet: FleetParams,
+                 weights: np.ndarray | None = None, **kw) -> list[DpSolution]:
+    """Sweep the energy/cost weighting (paper Fig. 3 pareto curves)."""
+    if weights is None:
+        weights = np.concatenate([[0.0], np.geomspace(0.02, 1.0, 9)])
+    return [solve_dp(work_cpu_s, fleet, energy_weight=float(w), **kw)
+            for w in weights]

@@ -1,0 +1,116 @@
+"""Spork's lightweight predictor (paper Alg. 2) — conditional-histogram
+expected-objective minimization, plus the lifetime map for amortizing
+spin-up overheads.
+
+Two interchangeable implementations:
+  * `expected_objective_jnp` / `predict_jnp`: pure-jnp, vectorized over all
+    candidate allocations x histogram bins; jittable inside the rate
+    simulator's scan. Doubles as the oracle for the `spork_predict` Pallas
+    kernel (see repro/kernels/spork_predict/ref.py which re-exports it).
+  * `Predictor`: a plain-Python/NumPy stateful version used by the exact
+    discrete-event simulator.
+
+The expected objective of allocating n_hat given the conditional histogram
+p(n) is (see core.breakeven for the coefficient mapping):
+
+    J(n_hat) = amort(n_hat)
+             + sum_n p(n) [ co_min*min(n_hat,n) + co_over*(n_hat-n)+
+                            + co_under*(n-n_hat)+ ]
+
+    amort(n_hat) = sum_{lvl=n_curr}^{n_hat-1} amort_unit / ceil(life(lvl)/T_s)
+
+Candidates outside [min bin, max bin] of the observed distribution are
+dominated (strictly more idle above, strictly more CPU spill below) and are
+masked out, matching Alg. 2's candidate set.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .breakeven import ObjectiveCoeffs
+
+
+def amortization_vector(life_sum: jnp.ndarray, life_cnt: jnp.ndarray,
+                        n_curr: jnp.ndarray, interval_s: float,
+                        amort_unit: float) -> jnp.ndarray:
+    """amort(n_hat) for every candidate n_hat in [0, N).
+
+    life_sum/life_cnt: per-level lifetime statistics (L). Levels with no
+    data default to one interval (full spin-up charged, conservative).
+    """
+    n = life_sum.shape[0]
+    avg_life = jnp.where(life_cnt > 0, life_sum / jnp.maximum(life_cnt, 1), interval_s)
+    epochs = jnp.maximum(jnp.ceil(avg_life / interval_s), 1.0)
+    per_level = amort_unit / epochs                       # cost of a spin-up at level
+    lvl = jnp.arange(n)
+    gated = jnp.where(lvl >= n_curr, per_level, 0.0)      # only new workers
+    csum = jnp.cumsum(gated)
+    # amort(n_hat) = sum over levels < n_hat
+    return jnp.concatenate([jnp.zeros((1,)), csum])[:n]
+
+
+def expected_objective_jnp(hist: jnp.ndarray, coeffs: ObjectiveCoeffs,
+                           amort: jnp.ndarray) -> jnp.ndarray:
+    """J(n_hat) for all n_hat; hist is the unnormalized count histogram."""
+    n = hist.shape[0]
+    total = jnp.sum(hist)
+    p = hist / jnp.maximum(total, 1.0)
+    cand = jnp.arange(n, dtype=jnp.float32)[:, None]      # n_hat
+    bins = jnp.arange(n, dtype=jnp.float32)[None, :]      # n
+    per = (coeffs.co_min * jnp.minimum(cand, bins)
+           + coeffs.co_over * jnp.maximum(cand - bins, 0.0)
+           + coeffs.co_under * jnp.maximum(bins - cand, 0.0))
+    j = per @ p + amort
+    # Candidate range: [min observed bin, max observed bin] (Alg. 2).
+    has = hist > 0
+    idx = jnp.arange(n)
+    lo = jnp.min(jnp.where(has, idx, n))
+    hi = jnp.max(jnp.where(has, idx, -1))
+    mask = (idx >= lo) & (idx <= hi)
+    return jnp.where(mask, j, jnp.inf)
+
+
+def predict_jnp(H: jnp.ndarray, life_sum: jnp.ndarray, life_cnt: jnp.ndarray,
+                n_prev: jnp.ndarray, n_curr: jnp.ndarray,
+                coeffs: ObjectiveCoeffs, interval_s: float) -> jnp.ndarray:
+    """Alg. 2: n_{t+1} from the histogram conditioned on n_{t-1}.
+
+    Falls back to n_prev when the conditional histogram is empty.
+    """
+    hist = H[n_prev]
+    amort = amortization_vector(life_sum, life_cnt, n_curr, interval_s,
+                                coeffs.amort_unit)
+    j = expected_objective_jnp(hist, coeffs, amort)
+    best = jnp.argmin(j).astype(jnp.int32)
+    empty = jnp.sum(hist) <= 0
+    return jnp.where(empty, n_prev.astype(jnp.int32), best)
+
+
+class Predictor:
+    """Stateful NumPy twin for the event-driven simulator."""
+
+    def __init__(self, n_max: int, coeffs: ObjectiveCoeffs, interval_s: float):
+        self.n_max = n_max
+        self.coeffs = coeffs
+        self.interval_s = interval_s
+        self.H = np.zeros((n_max, n_max), dtype=np.float64)
+        self.life_sum = np.zeros(n_max)
+        self.life_cnt = np.zeros(n_max)
+
+    def observe(self, n_lag2: int, n_needed: int) -> None:
+        self.H[min(n_lag2, self.n_max - 1), min(n_needed, self.n_max - 1)] += 1
+
+    def record_lifetime(self, level: int, lifetime_s: float) -> None:
+        level = min(level, self.n_max - 1)
+        self.life_sum[level] += lifetime_s
+        self.life_cnt[level] += 1
+
+    def predict(self, n_prev: int, n_curr: int) -> int:
+        n_prev = min(n_prev, self.n_max - 1)
+        out = predict_jnp(jnp.asarray(self.H), jnp.asarray(self.life_sum),
+                          jnp.asarray(self.life_cnt), jnp.asarray(n_prev),
+                          jnp.asarray(n_curr), self.coeffs, self.interval_s)
+        return int(out)

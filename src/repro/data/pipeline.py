@@ -1,0 +1,70 @@
+"""Synthetic token pipeline: deterministic, shardable, resumable.
+
+Design goals that matter at fleet scale:
+  * Determinism: batch t is a pure function of (seed, step, shard) — a
+    restarted or re-scheduled host regenerates exactly its shard without
+    coordination (the fault-tolerance path relies on this).
+  * Sharding: each data-parallel rank draws only its slice.
+  * Resume: the checkpoint stores just the step cursor.
+
+The generator is a stateless counter-based PRNG (threefry via
+jax.random.fold_in), with a lightweight Zipf-ish marginal so losses move
+like natural text rather than uniform noise. A host-side prefetcher
+overlaps generation with the device step.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TokenPipeline:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0, shard_index: int = 0, num_shards: int = 1,
+                 frontend_shape: tuple | None = None, d_model: int = 0):
+        assert global_batch % num_shards == 0
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.local_batch = global_batch // num_shards
+        self.seed = seed
+        self.shard = shard_index
+        self.frontend_shape = frontend_shape
+        self.d_model = d_model
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function of (seed, step, shard)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        # Zipf-ish marginal over the vocab, cheap approximation:
+        u = rng.random((self.local_batch, self.seq + 1))
+        toks = np.minimum((self.vocab ** u - 1), self.vocab - 1)
+        batch = {"tokens": jnp.asarray(toks.astype(np.int32))}
+        if self.frontend_shape:
+            fr = rng.standard_normal(
+                (self.local_batch, *self.frontend_shape)).astype(np.float32)
+            batch["frontend"] = jnp.asarray(fr)
+        return batch
+
+    def iterate(self, start_step: int = 0, prefetch: int = 2):
+        """Prefetching iterator; resume by passing the checkpointed step."""
+        q: queue.Queue = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not stop.is_set():
+                q.put((step, self.batch_at(step)))
+                step += 1
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

@@ -1,0 +1,48 @@
+"""Error-feedback int8 gradient compression.
+
+For multi-pod training the inter-pod gradient reduction crosses the slow
+links; quantizing gradients to int8 with per-tensor scales cuts that
+traffic 4x (bf16) while error feedback keeps the bias bounded: the
+quantization residual is carried into the next step's gradient.
+
+Usage: state = init_error_feedback(params);
+       grads, state = compress_decompress(grads, state)
+applied before the optimizer. The round-trip is exact enough that the
+convergence impact is second-order (validated on the quickstart model in
+tests/test_train.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _quantize(x):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, residuals):
+    """Simulated compressed all-reduce: quantize (grad + residual) to int8,
+    dequantize, and keep the new residual. On a real mesh the int8 payload
+    is what crosses the inter-pod links."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,2 @@
+"""Fault tolerance: failure simulation, elastic re-meshing, straggler
+mitigation."""

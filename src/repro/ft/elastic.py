@@ -1,0 +1,66 @@
+"""Elastic re-meshing and straggler mitigation.
+
+Recovery contract (exercised in tests/test_ft.py):
+  1. a host dies mid-run -> the step raises / the monitor flags it;
+  2. `shrink_mesh` rebuilds the largest well-formed (data, model) mesh
+     from the surviving device set (model-axis width is preserved when
+     possible — TP groups must stay intact; otherwise it falls back to
+     a narrower power-of-two model axis);
+  3. the driver restores the latest checkpoint re-sharded onto the new
+     mesh (checkpoint.store restores full logical arrays, so this is a
+     device_put with the new NamedShardings);
+  4. the data pipeline re-derives shard assignments from the new rank
+     list — batch t is a pure function of (seed, step, shard), so no
+     replay coordination is needed.
+
+Straggler policy: training-side, `StragglerPolicy` tracks per-host step
+times and flags hosts slower than `threshold` x median — the driver can
+evict them like failures (synchronous SPMD means one straggler stalls the
+fleet; eviction + elastic shrink is the standard mitigation). Serving-side
+hedging lives in serve.router (it reuses the paper's CanMeetDeadline
+machinery).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def shrink_mesh(devices, model_width: int):
+    """Largest (data, model) mesh from `devices` keeping model_width if
+    possible. Returns (mesh, dropped_count)."""
+    devices = list(devices)
+    n = len(devices)
+    width = model_width
+    while width > 1 and n // width == 0:
+        width //= 2
+    data = n // width
+    used = data * width
+    arr = np.array(devices[:used]).reshape(data, width)
+    from jax.sharding import Mesh
+    return Mesh(arr, ("data", "model")), n - used
+
+
+class StragglerPolicy:
+    def __init__(self, threshold: float = 3.0, window: int = 20):
+        self.threshold = threshold
+        self.window = window
+        self.times: dict[int, list[float]] = {}
+
+    def record(self, host: int, step_time_s: float) -> None:
+        self.times.setdefault(host, []).append(step_time_s)
+        if len(self.times[host]) > self.window:
+            self.times[host] = self.times[host][-self.window:]
+
+    def stragglers(self) -> list[int]:
+        if not self.times:
+            return []
+        meds = {h: float(np.median(t)) for h, t in self.times.items()
+                if len(t) >= 3}
+        if not meds:
+            return []
+        fleet_median = float(np.median(list(meds.values())))
+        return [h for h, m in meds.items()
+                if m > self.threshold * fleet_median]

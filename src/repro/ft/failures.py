@@ -1,0 +1,71 @@
+"""Failure injection + heartbeat monitoring (simulated fleet).
+
+On a real deployment each host runs a heartbeat thread and the coordinator
+(jax.distributed) evicts silent hosts; this module provides the same
+control surface for a simulated fleet so the recovery logic in
+ft.elastic / launch.train is exercised end-to-end in tests:
+
+  monitor = HeartbeatMonitor(hosts=range(4), timeout_s=2.0)
+  monitor.beat(0); ...
+  dead = monitor.dead(now)
+
+FailureInjector deterministically schedules host failures / stragglers
+from a seed so fault-tolerance tests are reproducible.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts, timeout_s: float = 10.0):
+        self.timeout = timeout_s
+        self.last = {h: 0.0 for h in hosts}
+
+    def beat(self, host, now: float) -> None:
+        if host in self.last:
+            self.last[host] = now
+
+    def dead(self, now: float) -> list:
+        return [h for h, t in self.last.items() if now - t > self.timeout]
+
+    def evict(self, host) -> None:
+        self.last.pop(host, None)
+
+    @property
+    def alive(self) -> list:
+        return sorted(self.last)
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    host: int
+    kind: str            # 'crash' | 'straggle'
+    factor: float = 1.0  # slowdown factor for stragglers
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests and chaos drills."""
+
+    def __init__(self, n_hosts: int, seed: int = 0, crash_rate: float = 0.0,
+                 straggle_rate: float = 0.0, horizon_steps: int = 1000):
+        rng = np.random.default_rng(seed)
+        self.events: list[FailureEvent] = []
+        for step in range(horizon_steps):
+            if rng.random() < crash_rate:
+                self.events.append(FailureEvent(
+                    step, int(rng.integers(n_hosts)), "crash"))
+            if rng.random() < straggle_rate:
+                self.events.append(FailureEvent(
+                    step, int(rng.integers(n_hosts)), "straggle",
+                    factor=float(rng.uniform(2, 10))))
+        self._by_step: dict[int, list[FailureEvent]] = {}
+        for e in self.events:
+            self._by_step.setdefault(e.step, []).append(e)
+
+    def at(self, step: int) -> list[FailureEvent]:
+        return self._by_step.get(step, [])

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Three kernels, each with the standard layout (<name>.py kernel with
+pl.pallas_call + explicit BlockSpec VMEM tiling; ops.py jit'd wrapper with
+interpret-mode fallback on CPU; ref.py pure-jnp oracle):
+
+  minplus/        min-plus DP transition for the pareto-optimal scheduler
+                  (transition matrix generated in-registers: O(N^2) compute
+                  on O(N) HBM traffic)
+  spork_predict/  Alg. 2 expected-objective scan over candidates x bins
+                  (the simulator's per-interval hot loop)
+  decode_attn/    GQA flash-decode attention with online softmax over KV
+                  blocks (the serving engine's hot-spot)
+"""

@@ -1,0 +1,1 @@
+from .ops import decode_attention  # noqa: F401

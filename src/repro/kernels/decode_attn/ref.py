@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: single-step GQA decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _masked_softmax(scores: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)               # all-masked rows
+    e = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m), 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Hq, D); k, v: (B, S, Hkv, D); lengths: (B,) valid cache length.
+
+    Hq must be a multiple of Hkv (grouped queries). Returns (B, Hq, D) in
+    q's dtype; softmax/accumulation in float32.
+    """
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) * (d ** -0.5)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)      # (B, Hkv, S, D)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qf, kf)
+    mask = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = _masked_softmax(scores)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)

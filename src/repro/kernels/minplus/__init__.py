@@ -1,0 +1,1 @@
+from .ops import minplus_step  # noqa: F401

@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the min-plus transition kernel.
+
+`minplus_step` has the exact signature of the jnp oracle
+(repro.core.dp.minplus_step_jnp) so the DP can swap implementations with a
+flag. On CPU the kernel runs in interpret mode (Python-level execution of
+the kernel body); on TPU it compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .minplus import minplus_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def minplus_step(F: jnp.ndarray, yc_prev: jnp.ndarray, yc_cur: jnp.ndarray,
+                 coeffs) -> tuple[jnp.ndarray, jnp.ndarray]:
+    af, df, ac, dc = coeffs
+    params = jnp.stack([jnp.asarray(af, jnp.float32),
+                        jnp.asarray(df, jnp.float32),
+                        jnp.asarray(ac, jnp.float32),
+                        jnp.asarray(dc, jnp.float32)])
+    return minplus_pallas(F, yc_prev, yc_cur, params, interpret=_interpret())

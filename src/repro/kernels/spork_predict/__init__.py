@@ -1,0 +1,1 @@
+from .ops import expected_objective  # noqa: F401

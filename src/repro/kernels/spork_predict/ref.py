@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the Alg.-2 expected-objective scan.
+
+Canonical implementation: repro.core.predictor.expected_objective_jnp
+(used directly by the simulators); re-exported to keep the standard
+kernels/<name>/{ref,ops} layout.
+"""
+
+from repro.core.predictor import expected_objective_jnp as expected_objective_ref  # noqa: F401,E501

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import to fabricate the placeholder devices.
+
+Target hardware: TPU v5e pods — 256 chips/pod as a (16, 16) (data, model)
+mesh; the multi-pod configuration stacks a leading 'pod' axis (2 pods =
+512 chips). The 'pod' axis defaults to outer data parallelism; the
+pipeline module can claim it for pipeline stages instead.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for smoke tests of mesh-aware code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# v5e hardware constants for the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12         # FLOP/s
+HBM_BW = 819e9                   # bytes/s
+ICI_BW_PER_LINK = 50e9           # bytes/s per link

@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) dry-run cell.
+
+Nothing here allocates: model parameters, optimizer state, KV caches and
+input batches are all jax.eval_shape / ShapeDtypeStruct artifacts with
+NamedShardings attached, which is exactly what jit(...).lower() needs.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.train.loop import (TrainState, init_train_state, make_serve_step,
+                              make_prefill_step, make_train_step)
+from repro.train.optim import adamw_init
+
+
+def _with_shardings(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        tree, shardings)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                for_train: bool) -> dict:
+    """ShapeDtypeStructs for one input batch."""
+    spec = SHAPES[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    out: dict[str, Any] = {}
+    if spec["kind"] == "decode":
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    elif spec["kind"] == "train":
+        # S+1 tokens so the shifted inputs are exactly S (keeps the
+        # sequence axis divisible for sequence-parallel sharding; the
+        # data pipeline fetches seq+1 for the same reason)
+        tok = jax.ShapeDtypeStruct((b, s + 1), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out["tokens"] = jax.ShapeDtypeStruct(
+        tok.shape, tok.dtype,
+        sharding=NamedSharding(mesh, shd.batch_pspec(tok.shape)))
+    if cfg.family == "encdec" and spec["kind"] != "decode":
+        fr = (b, cfg.src_len, cfg.d_model)
+        out["frontend"] = jax.ShapeDtypeStruct(
+            fr, jnp.float32,
+            sharding=NamedSharding(mesh, shd.batch_pspec(fr)))
+    if cfg.family == "vlm" and spec["kind"] != "decode":
+        fr = (b, cfg.n_patches, cfg.d_model)
+        out["frontend"] = jax.ShapeDtypeStruct(
+            fr, jnp.float32,
+            sharding=NamedSharding(mesh, shd.batch_pspec(fr)))
+    return out
+
+
+def model_state_specs(model: Model, mesh: Mesh, kind: str,
+                      shape_name: str):
+    """(state_or_params, extra...) ShapeDtypeStructs with shardings.
+
+    Parameter layout policy (§Perf iteration 1): training uses FSDP
+    storage only when the config demands it (cfg.fsdp_train); serving is
+    always TP/EP-only. Optimizer moments always get the ZeRO layout
+    (extra data-axis sharding) — they are elementwise state, free to live
+    in whatever layout fits."""
+    cfg = model.cfg
+    shd.set_fsdp(cfg.fsdp_train if kind == "train" else False)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = shd.param_shardings(params, mesh)
+    params = _with_shardings(params, pshard)
+    if kind == "train":
+        opt = jax.eval_shape(adamw_init, params)
+        oshard = shd.param_shardings(opt.mu, mesh, zero=True)
+        state = TrainState(
+            params=params,
+            opt=type(opt)(step=jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P())),
+                mu=_with_shardings(opt.mu, oshard),
+                nu=_with_shardings(opt.nu, oshard)),
+            ef=None)
+        return state
+    if kind == "decode":
+        spec = SHAPES[shape_name]
+        cache = jax.eval_shape(
+            lambda: model.init_cache(spec["global_batch"], spec["seq_len"]))
+        cshard = shd.cache_shardings(cache, mesh)
+        return params, _with_shardings(cache, cshard)
+    return params
+
+
+def cell_lowerable(arch: str, shape_name: str, mesh: Mesh,
+                   n_layers_override: int | None = None):
+    """Build (fn, example_args) for one dry-run cell; call
+    jit(fn).lower(*args) on the result."""
+    cfg = get_config(arch, "full")
+    if n_layers_override is not None:
+        cfg = _reduce_layers(cfg, n_layers_override)
+    spec = SHAPES[shape_name]
+    from repro.models import flags
+    if flags.SCAN_UNROLL:
+        # analysis lowerings: one full-width q-block instead of an
+        # unrolled 64-step scan — identical FLOPs/bytes, far smaller HLO
+        # (these artifacts are never executed; memory numbers come from
+        # the scan-form full-depth compile)
+        cfg = cfg.replace(q_block=max(spec["seq_len"], cfg.q_block))
+    model = build_model(cfg)
+    shd.set_mesh(mesh)
+    kind = spec["kind"]
+    if kind == "train":
+        state = model_state_specs(model, mesh, "train", shape_name)
+        batch = batch_specs(cfg, shape_name, mesh, True)
+        step = make_train_step(model, total_steps=1000)
+        return step, (state, batch)
+    if kind == "prefill":
+        params = model_state_specs(model, mesh, "prefill", shape_name)
+        batch = batch_specs(cfg, shape_name, mesh, False)
+        step = make_prefill_step(model)
+        return step, (params, batch)
+    # decode
+    params, cache = model_state_specs(model, mesh, "decode", shape_name)
+    batch = batch_specs(cfg, shape_name, mesh, False)
+    step = make_serve_step(model)
+    return step, (params, cache, batch["tokens"])
+
+
+def _reduce_layers(cfg: ModelConfig, n: int) -> ModelConfig:
+    """Depth-reduced variant preserving the layer mix (for the unrolled
+    roofline lowerings; see models.flags)."""
+    kw: dict[str, Any] = {"n_layers": n}
+    if cfg.family == "moe" and cfg.n_dense_layers:
+        kw["n_dense_layers"] = min(1, n - 1) if n > 1 else 0
+        kw["n_layers"] = n
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern)
+        kw["n_layers"] = max(pat, (n // pat) * pat)
+    if cfg.family == "encdec":
+        kw["n_encoder_layers"] = n
+    return cfg.replace(**kw)

@@ -1,0 +1,13 @@
+"""Model zoo: the 10 assigned architectures as one composable LM stack.
+
+Families: dense transformer (granite/nemotron/qwen3), MoE (dbrx,
+deepseek-v3 with MLA), SSM (mamba2 SSD), hybrid RG-LRU (recurrentgemma),
+encoder-decoder (whisper, frontend stubbed), VLM backbone (internvl2,
+frontend stubbed). All expose the unified Model API in model.py:
+init / loss / forward / prefill / decode_step, built on scan-over-layers
+with stacked parameters so compile time and HLO size stay bounded at
+80-layer scale.
+"""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,219 @@
+"""GQA attention: chunked (FlashAttention-style) training/prefill path and
+single-token decode against a KV cache.
+
+The training path tiles the query axis with lax.scan and rematerializes
+each block's scores on the backward pass (jax.checkpoint on the body), so
+peak activation memory is O(q_block * S) instead of O(S^2) — the XLA-level
+adaptation of flash attention; the decode path optionally uses the Pallas
+flash-decode kernel.
+
+Supports: grouped/multi-query heads, qk RMSNorm (qwen3), sliding windows
+(recurrentgemma local attention), non-causal encoders (whisper), and
+cross-attention (decoder attending to encoder memory).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import uscan
+
+from repro.models.layers import dense_init, rms_norm, rope
+
+NEG = -1.0e30
+
+
+def init_attention(key, cfg_d, n_heads, n_kv_heads, d_head, dtype,
+                   qk_norm=False, stack=()):
+    ks = jax.random.split(key, 4)
+    shp = lambda a, b: (*stack, a, b)
+    p = {
+        "wq": dense_init(ks[0], cfg_d, n_heads * d_head, dtype,
+                         shp(cfg_d, n_heads * d_head)),
+        "wk": dense_init(ks[1], cfg_d, n_kv_heads * d_head, dtype,
+                         shp(cfg_d, n_kv_heads * d_head)),
+        "wv": dense_init(ks[2], cfg_d, n_kv_heads * d_head, dtype,
+                         shp(cfg_d, n_kv_heads * d_head)),
+        "wo": dense_init(ks[3], n_heads * d_head, cfg_d, dtype,
+                         shp(n_heads * d_head, cfg_d)),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((*stack, d_head), dtype)
+        p["k_norm"] = jnp.zeros((*stack, d_head), dtype)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv_heads, d_head, positions,
+                 rope_theta, qk_norm, xkv=None):
+    """Returns q (B,S,Hq,D), k,v (B,Skv,Hkv,D)."""
+    b, s, _ = x.shape
+    xkv = x if xkv is None else xkv
+    skv = xkv.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, s, n_heads, d_head)
+    k = jnp.einsum("bsd,dh->bsh", xkv, params["wk"]).reshape(b, skv, n_kv_heads, d_head)
+    v = jnp.einsum("bsd,dh->bsh", xkv, params["wv"]).reshape(b, skv, n_kv_heads, d_head)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if positions is not None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions[..., :skv] if positions.shape[-1] >= skv
+                 else positions, rope_theta)
+    return q, k, v
+
+
+def sdpa_chunked(q, k, v, *, causal=True, window=0, q_block=512,
+                 kv_positions=None, q_positions=None):
+    """Scaled dot-product attention, tiled over query blocks.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D). Hq % Hkv == 0.
+    Masks: causal (q_pos >= kv_pos) and optional sliding window
+    (q_pos - kv_pos < window).
+    """
+    from repro.distributed.sharding import axis_size, constrain
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    # repeat-kv: when kv heads don't divide the TP axis but q heads do,
+    # expand k/v to per-q-head copies so the score/softmax tensors shard
+    # over 'model' instead of replicating (each TP rank holds the kv heads
+    # its q heads need — the standard GQA-under-TP layout)
+    ms = axis_size("model")
+    if g > 1 and hkv % ms != 0 and hq % ms == 0:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        hkv, g = hq, 1
+    q = constrain(q, ("data", None, "model", None))
+    k = constrain(k, ("data", None, "model", None))
+    v = constrain(v, ("data", None, "model", None))
+    scale = d ** -0.5
+    q_block = min(q_block, sq)
+    n_blocks = -(-sq // q_block)
+    pad = n_blocks * q_block - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if q_positions is None:
+        q_positions = jnp.arange(sq + pad)
+        qpos_blocks = q_positions.reshape(n_blocks, q_block)
+        qpos_b = None
+    else:
+        qp = jnp.pad(q_positions, ((0, 0), (0, pad)))
+        qpos_b = qp.reshape(b, n_blocks, q_block).transpose(1, 0, 2)
+        qpos_blocks = None
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)
+
+    qb = q.reshape(b, n_blocks, q_block, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kt = k.transpose(0, 2, 3, 1)          # (B, Hkv, D, Skv)
+    vt = v.transpose(0, 2, 1, 3)          # (B, Hkv, Skv, D)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        if qpos_b is None:
+            qblk, qpos = xs
+            qpos = qpos[None, :]
+        else:
+            qblk, qpos = xs
+        # qblk: (B, Hkv, G, q_block, D)
+        scores = jnp.einsum("bhgqd,bhdk->bhgqk", qblk.astype(jnp.float32) * scale,
+                            kt.astype(jnp.float32))
+        mask = jnp.ones((1, 1, 1, qblk.shape[3], skv), bool)
+        qp = qpos[:, None, None, :, None]
+        kp = kv_positions[None, None, None, None, :]
+        if causal:
+            mask &= qp >= kp
+        if window:
+            mask &= (qp - kp) < window
+        scores = jnp.where(mask, scores, NEG)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", w, vt.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    xs = (qb, qpos_blocks if qpos_b is None else qpos_b)
+    _, outs = uscan(body, None, xs)
+    # outs: (n_blocks, B, Hkv, G, q_block, Dv) — v's head dim may differ
+    # from q's (MLA: q is nope+rope, v is v_head_dim)
+    dv = v.shape[-1]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(
+        b, n_blocks * q_block, hq, dv)
+    return out[:, :sq]
+
+
+def attention_block(params, x, cfg, memory=None, layer_window=0,
+                    causal=None):
+    """Full attention sub-block for training/prefill (projections + sdpa +
+    output). memory: encoder output for cross-attention (no rope there)."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    q, k, v = _project_qkv(
+        params, x, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+        None if memory is not None else pos,
+        cfg.rope_theta, cfg.qk_norm, xkv=memory)
+    if causal is None:
+        causal = cfg.causal and memory is None
+    out = sdpa_chunked(q, k, v, causal=causal, window=layer_window,
+                       q_block=cfg.q_block)
+    return jnp.einsum("bsx,xe->bse", out.reshape(b, s, -1), params["wo"])
+
+
+def decode_attention_step(params, x, cache_k, cache_v, length, cfg,
+                          use_kernel=False, ring: bool = False):
+    """One-token decode. x: (B, 1, d); cache_k/v: (B, S, Hkv, D) holding
+    `length` previously written tokens (scalar or (B,)).
+
+    ring=True treats the cache as a sliding-window ring buffer (cache size
+    = window): the new token is written at position length % S, rope uses
+    the absolute position, and validity is clipped at S. Softmax is
+    permutation-invariant, so ring order never matters given absolute-rope
+    keys. Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    lengths = jnp.broadcast_to(jnp.asarray(length), (b,))
+    pos = lengths[:, None]                                  # absolute (B, 1)
+    q, k_new, v_new = _project_qkv(
+        params, x, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, None,
+        cfg.rope_theta, cfg.qk_norm)
+    q = rope(q, pos, cfg.rope_theta)
+    k_new = rope(k_new, pos, cfg.rope_theta)
+    s = cache_k.shape[1]
+    slot = (lengths % s) if ring else lengths
+    onehot = (jnp.arange(s)[None, :, None, None] == slot[:, None, None, None])
+    cache_k = jnp.where(onehot, k_new.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(onehot, v_new.astype(cache_v.dtype), cache_v)
+    new_len = jnp.minimum(lengths + 1, s) if ring else lengths + 1
+    if use_kernel:
+        from repro.kernels.decode_attn import decode_attention
+        out = decode_attention(q[:, 0], cache_k, cache_v, new_len)
+    else:
+        from repro.kernels.decode_attn.ref import decode_attention_ref
+        out = decode_attention_ref(q[:, 0], cache_k, cache_v, new_len)
+    out = out.reshape(b, 1, -1)
+    return (jnp.einsum("bsx,xe->bse", out, params["wo"]),
+            cache_k, cache_v)
+
+
+def cross_attention_decode(params, x, mem_k, mem_v, cfg):
+    """Decode-time cross-attention against precomputed encoder K/V.
+
+    x: (B, 1, d); mem_k/v: (B, Ssrc, Hkv, D) computed once at prefill."""
+    from repro.kernels.decode_attn.ref import decode_attention_ref
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(
+        b, 1, cfg.n_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+    lengths = jnp.full((b,), mem_k.shape[1], jnp.int32)
+    out = decode_attention_ref(q[:, 0], mem_k, mem_v, lengths)
+    return jnp.einsum("bsx,xe->bse", out.reshape(b, 1, -1), params["wo"])
+
+
+def project_memory_kv(params, memory, cfg):
+    """Encoder-memory K/V for cross-attention (cached at prefill)."""
+    b, s, _ = memory.shape
+    k = jnp.einsum("bsd,dh->bsh", memory, params["wk"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.d_head)
+    v = jnp.einsum("bsd,dh->bsh", memory, params["wv"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        k = rms_norm(k, params["k_norm"])
+    return k, v

@@ -1,0 +1,18 @@
+"""Model-level analysis flags.
+
+SCAN_UNROLL: when True, model scans (layers, q-blocks, SSD chunks) fully
+unroll. XLA's HloCostAnalysis counts while-loop bodies ONCE regardless of
+trip count (verified empirically; see EXPERIMENTS.md §Roofline
+methodology), so the roofline runner lowers reduced-layer configs with
+this flag on to get exact FLOP/byte/collective counts, then extrapolates
+linearly in depth. Never enable for real execution of deep configs.
+"""
+
+import jax
+
+SCAN_UNROLL = False
+
+
+def uscan(f, init, xs, **kw):
+    """lax.scan honoring the unroll-for-analysis flag."""
+    return jax.lax.scan(f, init, xs, unroll=True if SCAN_UNROLL else 1, **kw)

@@ -1,0 +1,121 @@
+"""Shared layer primitives: norms, rotary embeddings, MLP variants,
+embeddings, initialization. Pure functions over param pytrees (dicts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, shape=None):
+    """Fan-in scaled init; `shape` overrides for stacked/expert weights
+    (last dim = fan-out, second-to-last = fan-in unless given)."""
+    shape = shape or (d_in, d_out)
+    return truncated_normal(key, shape, d_in ** -0.5, dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms(d, dtype):
+    return jnp.zeros((d,), dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0, rotary_dim: int | None = None,
+         has_head_axis: bool | None = None):
+    """Rotary position embedding.
+
+    x: (B, S, H, D) with a head axis (default when x.ndim >= 4) or
+    (B, S, D)/(S, D) without one; positions: (S,) or (B, S)."""
+    dt = x.dtype
+    d = x.shape[-1] if rotary_dim is None else rotary_dim
+    half = d // 2
+    if has_head_axis is None:
+        has_head_axis = x.ndim >= 4
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32)
+                   / half)
+    pos = jnp.asarray(positions)
+    ang = pos.astype(jnp.float32)[..., None] * freq             # (..., S, half)
+    if has_head_axis:
+        ang = ang[..., None, :]                                 # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:d].astype(jnp.float32)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if rotary_dim is not None and rotary_dim < x.shape[-1]:
+        rot = jnp.concatenate([rot.astype(dt), x[..., d:]], axis=-1)
+        return rot
+    return rot.astype(dt)
+
+
+# ----------------------------------------------------------------- MLPs
+def init_mlp(key, d, ff, mlp_type, dtype, stack=()):
+    ks = jax.random.split(key, 3)
+    shp = lambda a, b: (*stack, a, b)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, ff, dtype, shp(d, ff)),
+            "w_up": dense_init(ks[1], d, ff, dtype, shp(d, ff)),
+            "w_down": dense_init(ks[2], ff, d, dtype, shp(ff, d)),
+        }
+    return {
+        "w_in": dense_init(ks[0], d, ff, dtype, shp(d, ff)),
+        "w_down": dense_init(ks[1], ff, d, dtype, shp(ff, d)),
+    }
+
+
+def mlp(params, x, mlp_type):
+    if mlp_type == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif mlp_type == "gelu":
+        h = jnp.einsum("...d,df->...f", x, params["w_in"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    elif mlp_type == "relu2":  # squared ReLU (nemotron-4)
+        h = jnp.einsum("...d,df->...f", x, params["w_in"])
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    else:
+        raise ValueError(mlp_type)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ----------------------------------------------------------- embeddings
+def init_embed(key, vocab, d, dtype):
+    return truncated_normal(key, (vocab, d), 1.0, dtype)
+
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table, x, valid_vocab: int):
+    """Tied output head; padded vocab ids masked to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+    v = table.shape[0]
+    if valid_vocab < v:
+        mask = jnp.arange(v) < valid_vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits, labels, mask=None, z_weight: float = 1e-4):
+    """Mean token cross-entropy (float32) + z-loss for logit drift."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    zl = z_weight * jnp.square(logz)
+    loss = nll + zl
+    if mask is not None:
+        loss = loss * mask
+        return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

@@ -1,0 +1,115 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Training/prefill: queries via a low-rank path (d -> q_lora -> heads x
+(nope+rope)); keys/values decompressed from a shared latent
+(d -> kv_lora + k_rope). The decode path uses the *absorbed* formulation:
+W_uk is folded into the query and W_uv into the output so the per-token
+cache is just (kv_lora + rope) floats — MLA's serving advantage, which is
+what makes deepseek-v3's decode_32k cell cache-light.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import sdpa_chunked
+from repro.models.layers import dense_init, rms_norm, rope
+
+
+def init_mla(key, cfg, stack=()):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    shp = lambda a, b: (*stack, a, b)
+    return {
+        "w_dq": dense_init(ks[0], d, qr, cfg.dtype, shp(d, qr)),
+        "q_norm": jnp.zeros((*stack, qr), cfg.dtype),
+        "w_uq": dense_init(ks[1], qr, h * (dn + dr), cfg.dtype,
+                           shp(qr, h * (dn + dr))),
+        "w_dkv": dense_init(ks[2], d, kvr + dr, cfg.dtype, shp(d, kvr + dr)),
+        "kv_norm": jnp.zeros((*stack, kvr), cfg.dtype),
+        "w_ukv": dense_init(ks[3], kvr, h * (dn + dv), cfg.dtype,
+                            shp(kvr, h * (dn + dv))),
+        "wo": dense_init(ks[4], h * dv, d, cfg.dtype, shp(h * dv, d)),
+    }
+
+
+def _latents(params, x, cfg, positions):
+    """Compressed kv latent + rotary key shared across heads."""
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv, k_pe = ckv[..., :kvr], ckv[..., kvr:]
+    c_kv = rms_norm(c_kv, params["kv_norm"])
+    k_pe = rope(k_pe, positions, cfg.rope_theta)
+    return c_kv, k_pe
+
+
+def _queries(params, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                  params["q_norm"])
+    q = jnp.einsum("bsr,rh->bsh", cq, params["w_uq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_block(params, x, cfg):
+    """Training/prefill MLA. x: (B, S, d)."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    pos = jnp.arange(s)
+    q_nope, q_pe = _queries(params, x, cfg, pos)
+    c_kv, k_pe = _latents(params, x, cfg, pos)
+    kv = jnp.einsum("bsr,rh->bsh", c_kv, params["w_ukv"]).reshape(
+        b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, dr))], -1)
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    out = sdpa_chunked(q, k, v, causal=True, q_block=cfg.q_block)
+    return jnp.einsum("bsx,xe->bse", out.reshape(b, s, -1), params["wo"])
+
+
+def mla_decode_step(params, x, cache_ckv, cache_kpe, length, cfg):
+    """Absorbed-matrix decode. x: (B, 1, d); cache_ckv: (B, S, kv_lora);
+    cache_kpe: (B, S, rope_dim). Returns (out, new_ckv, new_kpe)."""
+    b = x.shape[0]
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    kvr = cfg.kv_lora_rank
+    lengths = jnp.broadcast_to(jnp.asarray(length), (b,))
+    pos = lengths[:, None]
+
+    q_nope, q_pe = _queries(params, x, cfg, pos)          # (B,1,H,dn/dr)
+    c_kv, k_pe = _latents(params, x, cfg, pos)            # (B,1,kvr),(B,1,dr)
+
+    s = cache_ckv.shape[1]
+    onehot = jnp.arange(s)[None, :, None] == lengths[:, None, None]
+    cache_ckv = jnp.where(onehot, c_kv.astype(cache_ckv.dtype), cache_ckv)
+    cache_kpe = jnp.where(onehot, k_pe.astype(cache_kpe.dtype), cache_kpe)
+    new_len = lengths + 1
+
+    # absorb W_uk into the query: q_abs (B,H,kvr)
+    w_uk = params["w_ukv"][:, :].reshape(kvr, h, dn + dv)[..., :dn]
+    w_uv = params["w_ukv"][:, :].reshape(kvr, h, dn + dv)[..., dn:]
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bhr,bsr->bhs", q_abs,
+                         cache_ckv.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs", q_pe[:, 0].astype(jnp.float32),
+                           cache_kpe.astype(jnp.float32))) * scale
+    mask = jnp.arange(s)[None, None, :] < new_len[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dv).astype(x.dtype)
+    return (jnp.einsum("bsx,xe->bse", out, params["wo"]),
+            cache_ckv, cache_kpe)

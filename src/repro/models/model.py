@@ -1,0 +1,616 @@
+"""Unified Model API over the six architecture families.
+
+All models expose:
+    init(key)                          -> params (dict pytree)
+    loss(params, batch)                -> (scalar, metrics)   [train]
+    forward(params, tokens, frontend)  -> logits              [debug/eval]
+    init_cache(batch, max_len)         -> cache pytree        [serving]
+    prefill(params, batch, cache)      -> (cache, last_logits)
+    decode_step(params, tokens, cache) -> (cache, logits)
+
+Layers are stacked (leading layer axis) and driven by lax.scan with
+jax.checkpoint on the block body, so HLO size and compile time stay
+bounded at 80-layer scale and activation memory follows the standard
+remat-over-layers profile.
+
+batch dict keys: "tokens" (B, S) int32; "frontend" (B, Ssrc|n_patches, d)
+for the stubbed audio/vision frontends; "lengths" (B,) for ragged decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.config import ModelConfig
+from repro.models.flags import uscan
+from repro.models.layers import (cross_entropy, dense_init, embed,
+                                 init_embed, init_mlp, init_rms, mlp,
+                                 rms_norm, unembed)
+
+
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = _split(key, 8)
+        params: dict[str, Any] = {
+            "embed": init_embed(ks[0], cfg.padded_vocab, cfg.d_model, cfg.dtype),
+            "final_norm": init_rms(cfg.d_model, cfg.dtype),
+        }
+        if cfg.family in ("dense", "vlm"):
+            params["layers"] = self._init_attn_mlp_stack(
+                ks[1], cfg.n_layers)
+        elif cfg.family == "moe":
+            if cfg.n_dense_layers:
+                params["dense_layers"] = self._init_attn_mlp_stack(
+                    ks[1], cfg.n_dense_layers)
+            params["moe_layers"] = self._init_moe_stack(
+                ks[2], cfg.n_layers - cfg.n_dense_layers)
+            if cfg.mtp:
+                params["mtp"] = self._init_mtp(ks[3])
+        elif cfg.family == "ssm":
+            params["layers"] = self._init_ssm_stack(ks[1], cfg.n_layers)
+        elif cfg.family == "hybrid":
+            pat = len(cfg.block_pattern)
+            n_super, rem = divmod(cfg.n_layers, pat)
+            params["super"] = self._init_hybrid_super(ks[1], n_super)
+            if rem:
+                params["tail"] = self._init_hybrid_super(
+                    ks[2], 1, pattern=cfg.block_pattern[:rem])
+        elif cfg.family == "encdec":
+            params["encoder"] = self._init_attn_mlp_stack(
+                ks[1], cfg.n_encoder_layers)
+            params["decoder"] = self._init_decoder_stack(ks[2], cfg.n_layers)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    def _init_attn_mlp_stack(self, key, n):
+        cfg = self.cfg
+        ks = _split(key, 3)
+        stack = (n,)
+        return {
+            "ln1": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "attn": attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.d_head, cfg.dtype,
+                                        cfg.qk_norm, stack=stack),
+            "ln2": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                            cfg.dtype, stack=stack),
+        }
+
+    def _init_moe_stack(self, key, n):
+        cfg = self.cfg
+        ks = _split(key, 3)
+        stack = (n,)
+        a = (mla_mod.init_mla(ks[0], cfg, stack=stack) if cfg.use_mla else
+             attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.d_head, cfg.dtype,
+                                 cfg.qk_norm, stack=stack))
+        return {
+            "ln1": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "attn": a,
+            "ln2": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "moe": moe_mod.init_moe(ks[1], cfg, stack=stack),
+        }
+
+    def _init_ssm_stack(self, key, n):
+        cfg = self.cfg
+        return {
+            "ln": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "ssd": ssd_mod.init_ssd(key, cfg, stack=(n,)),
+        }
+
+    def _init_hybrid_super(self, key, n, pattern=None):
+        cfg = self.cfg
+        pattern = pattern or cfg.block_pattern
+        ks = _split(key, len(pattern))
+        out = {}
+        for i, kind in enumerate(pattern):
+            sk = _split(ks[i], 2)
+            entry = {
+                "ln1": jnp.zeros((n, cfg.d_model), cfg.dtype),
+                "ln2": jnp.zeros((n, cfg.d_model), cfg.dtype),
+                "mlp": init_mlp(sk[1], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                                cfg.dtype, stack=(n,)),
+            }
+            if kind == "attn":
+                entry["attn"] = attn.init_attention(
+                    sk[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.d_head, cfg.dtype, cfg.qk_norm, stack=(n,))
+            else:
+                entry["rglru"] = rglru_mod.init_rglru(sk[0], cfg, stack=(n,))
+            out[f"b{i}_{kind}"] = entry
+        return out
+
+    def _init_decoder_stack(self, key, n):
+        cfg = self.cfg
+        ks = _split(key, 4)
+        stack = (n,)
+        return {
+            "ln1": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "self_attn": attn.init_attention(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                cfg.dtype, cfg.qk_norm, stack=stack),
+            "ln_x": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "cross_attn": attn.init_attention(
+                ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                cfg.dtype, cfg.qk_norm, stack=stack),
+            "ln2": jnp.zeros((n, cfg.d_model), cfg.dtype),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                            cfg.dtype, stack=stack),
+        }
+
+    def _init_mtp(self, key):
+        cfg = self.cfg
+        ks = _split(key, 2)
+        return {
+            "proj": dense_init(ks[0], 2 * cfg.d_model, cfg.d_model, cfg.dtype),
+            "block": self._init_attn_mlp_stack(ks[1], 1),
+            "ln": init_rms(cfg.d_model, cfg.dtype),
+        }
+
+    # ------------------------------------------------------ train paths
+    def _attn_mlp_scan(self, stacked, x, window_by_layer=None, memory=None,
+                       causal=None):
+        cfg = self.cfg
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def block(h, p):
+            h = constrain(h, ("data", "model", None))
+            a = attn.attention_block(p["attn"], rms_norm(h, p["ln1"]), cfg,
+                                     memory=memory, causal=causal)
+            h = h + a
+            h = h + mlp(p["mlp"], rms_norm(h, p["ln2"]), cfg.mlp_type)
+            return constrain(h, ("data", "model", None))
+
+        def body(h, p):
+            return block(h, p), None
+
+        x, _ = uscan(body, x, stacked)
+        return x
+
+    def _moe_scan(self, stacked, x):
+        cfg = self.cfg
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def block(carry, p):
+            h, aux = carry
+            h = constrain(h, ("data", "model", None))
+            hn = rms_norm(h, p["ln1"])
+            a = (mla_mod.mla_block(p["attn"], hn, cfg) if cfg.use_mla
+                 else attn.attention_block(p["attn"], hn, cfg))
+            h = h + a
+            m, aux_l = moe_mod.moe_block(p["moe"], rms_norm(h, p["ln2"]), cfg)
+            return (constrain(h + m, ("data", "model", None)), aux + aux_l)
+
+        def body(carry, p):
+            return block(carry, p), None
+
+        (x, aux), _ = uscan(body, (x, jnp.float32(0.0)), stacked)
+        return x, aux
+
+    def _ssm_scan(self, stacked, x):
+        cfg = self.cfg
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def block(h, p):
+            h = constrain(h, ("data", "model", None))
+            return constrain(
+                h + ssd_mod.ssd_block(p["ssd"], rms_norm(h, p["ln"]), cfg),
+                ("data", "model", None))
+
+        x, _ = uscan(lambda h, p: (block(h, p), None), x, stacked)
+        return x
+
+    def _hybrid_scan(self, stacked, x, pattern):
+        cfg = self.cfg
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def super_block(h, p):
+            for i, kind in enumerate(pattern):
+                q = p[f"b{i}_{kind}"]
+                h = constrain(h, ("data", "model", None))
+                hn = rms_norm(h, q["ln1"])
+                if kind == "attn":
+                    t = attn.attention_block(q["attn"], hn, cfg,
+                                             layer_window=cfg.window)
+                else:
+                    t = rglru_mod.rglru_block(q["rglru"], hn, cfg)
+                h = h + t
+                h = h + mlp(q["mlp"], rms_norm(h, q["ln2"]), cfg.mlp_type)
+            return constrain(h, ("data", "model", None))
+
+        x, _ = uscan(lambda h, p: (super_block(h, p), None), x, stacked)
+        return x
+
+    def _backbone(self, params, x, memory=None):
+        """Token embeddings in, final hidden out; returns (x, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        if cfg.family in ("dense", "vlm"):
+            x = self._attn_mlp_scan(params["layers"], x)
+        elif cfg.family == "moe":
+            if cfg.n_dense_layers:
+                x = self._attn_mlp_scan(params["dense_layers"], x)
+            x, aux = self._moe_scan(params["moe_layers"], x)
+        elif cfg.family == "ssm":
+            x = self._ssm_scan(params["layers"], x)
+        elif cfg.family == "hybrid":
+            x = self._hybrid_scan(params["super"], x, cfg.block_pattern)
+            if "tail" in params:
+                rem = cfg.n_layers % len(cfg.block_pattern)
+                x = self._hybrid_scan(params["tail"], x,
+                                      cfg.block_pattern[:rem])
+        elif cfg.family == "encdec":
+            x = self._decoder_scan(params["decoder"], x, memory)
+        return x, aux
+
+    def _decoder_scan(self, stacked, x, memory):
+        cfg = self.cfg
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def block(h, p):
+            h = constrain(h, ("data", "model", None))
+            h = h + attn.attention_block(p["self_attn"],
+                                         rms_norm(h, p["ln1"]), cfg)
+            h = h + attn.attention_block(p["cross_attn"],
+                                         rms_norm(h, p["ln_x"]), cfg,
+                                         memory=memory)
+            h = h + mlp(p["mlp"], rms_norm(h, p["ln2"]), cfg.mlp_type)
+            return constrain(h, ("data", "model", None))
+
+        x, _ = uscan(lambda h, p: (block(h, p), None), x, stacked)
+        return x
+
+    def _encode(self, params, frontend):
+        """Encoder over stubbed frontend embeddings (whisper)."""
+        return self._attn_mlp_scan(params["encoder"], frontend, causal=False)
+
+    def _hidden(self, params, tokens, frontend=None):
+        """Backbone hidden states (pre-final-norm) + aux loss."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        memory = None
+        if cfg.family == "encdec":
+            memory = self._encode(params, frontend.astype(cfg.dtype))
+        elif cfg.family == "vlm":
+            x = jnp.concatenate([frontend.astype(cfg.dtype), x], axis=1)
+        return self._backbone(params, x, memory=memory)
+
+    def forward(self, params, tokens, frontend=None):
+        """Logits for the full sequence (training-style pass)."""
+        cfg = self.cfg
+        h, aux = self._hidden(params, tokens, frontend)
+        x = rms_norm(h, params["final_norm"])
+        if cfg.family == "vlm":
+            x = x[:, frontend.shape[1]:]
+        logits = constrain(unembed(params["embed"], x, cfg.vocab_size),
+                           ("data", None, "model"))
+        return logits, aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        frontend = batch.get("frontend")
+        h, aux = self._hidden(params, tokens[:, :-1], frontend)
+        hx = rms_norm(h, params["final_norm"])
+        if cfg.family == "vlm":
+            hx = hx[:, frontend.shape[1]:]
+        logits = constrain(unembed(params["embed"], hx, cfg.vocab_size),
+                           ("data", None, "model"))
+        ce = cross_entropy(logits, tokens[:, 1:])
+        total = ce + aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.family == "moe" and cfg.mtp:
+            mtp_loss = self._mtp_loss(params, h, tokens, frontend)
+            total = total + cfg.mtp_weight * mtp_loss
+            metrics["mtp"] = mtp_loss
+        return total, metrics
+
+    def _mtp_loss(self, params, h, tokens, frontend):
+        """DeepSeek-V3 multi-token prediction: one extra depth predicting
+        token t+2 from the *shared* trunk hidden at t plus embed(t+1)."""
+        cfg = self.cfg
+        if cfg.family == "vlm" and frontend is not None:
+            h = h[:, frontend.shape[1]:]
+        h2 = h[:, :-1]                              # positions 0..S-3
+        nxt = embed(params["embed"], tokens[:, 1:-1])
+        merged = jnp.concatenate(
+            [rms_norm(h2, params["mtp"]["ln"]), nxt], axis=-1)
+        x2 = jnp.einsum("bsd,de->bse", merged, params["mtp"]["proj"])
+        x2 = self._attn_mlp_scan(params["mtp"]["block"], x2)
+        logits = unembed(params["embed"], x2, cfg.vocab_size)
+        return cross_entropy(logits, tokens[:, 2:])
+
+    # --------------------------------------------------------- serving
+    def init_cache(self, batch_size: int, max_len: int) -> dict:
+        """Zero-initialized decode cache (dtype = cfg.dtype)."""
+        cfg = self.cfg
+        c: dict[str, Any] = {"length": jnp.zeros((batch_size,), jnp.int32)}
+        dt = cfg.dtype
+
+        def kv(n_layers, s):
+            shp = (n_layers, batch_size, s, cfg.n_kv_heads, cfg.d_head)
+            return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+        if cfg.family in ("dense", "vlm"):
+            c["kv"] = kv(cfg.n_layers, max_len)
+        elif cfg.family == "moe":
+            if cfg.n_dense_layers:
+                c["dense_kv"] = kv(cfg.n_dense_layers, max_len)
+            n = cfg.n_layers - cfg.n_dense_layers
+            if cfg.use_mla:
+                c["ckv"] = jnp.zeros((n, batch_size, max_len,
+                                      cfg.kv_lora_rank), dt)
+                c["kpe"] = jnp.zeros((n, batch_size, max_len,
+                                      cfg.qk_rope_dim), dt)
+            else:
+                c["moe_kv"] = kv(n, max_len)
+        elif cfg.family == "ssm":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            c["conv"] = jnp.zeros((cfg.n_layers, batch_size,
+                                   cfg.ssm_conv - 1, conv_dim), dt)
+            c["ssm"] = jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_heads,
+                                  cfg.ssm_headdim, cfg.ssm_state),
+                                 jnp.float32)
+        elif cfg.family == "hybrid":
+            pat = len(cfg.block_pattern)
+            n_super = cfg.n_layers // pat
+            w = cfg.lru_width or cfg.d_model
+            n_rec_per = sum(1 for k in cfg.block_pattern if k != "attn")
+            n_att_per = pat - n_rec_per
+            win = min(cfg.window or max_len, max_len)
+            c["conv"] = jnp.zeros((n_super, n_rec_per, batch_size, 3, w), dt)
+            c["h"] = jnp.zeros((n_super, n_rec_per, batch_size, w),
+                               jnp.float32)
+            c["kv"] = kv(n_super * n_att_per, win)
+            rem = cfg.n_layers % pat
+            if rem:
+                rem_rec = sum(1 for k in cfg.block_pattern[:rem]
+                              if k != "attn")
+                c["tail_conv"] = jnp.zeros((1, rem_rec, batch_size, 3, w), dt)
+                c["tail_h"] = jnp.zeros((1, rem_rec, batch_size, w),
+                                        jnp.float32)
+        elif cfg.family == "encdec":
+            c["kv"] = kv(cfg.n_layers, max_len)
+            c["mem_k"] = jnp.zeros((cfg.n_layers, batch_size, cfg.src_len,
+                                    cfg.n_kv_heads, cfg.d_head), dt)
+            c["mem_v"] = jnp.zeros_like(c["mem_k"])
+        return c
+
+    def prefill(self, params, batch, cache):
+        """Sequential prefill: feed tokens one at a time through
+        decode_step (correct for every family; serving engines that need
+        fast prefill use forward() + cache extraction instead). Encoder
+        memory (encdec) and patch prefixes (vlm) are ingested here."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            memory = self._encode(params, batch["frontend"].astype(cfg.dtype))
+
+            def proj(p, _):
+                return None, None
+            ks, vs = [], []
+            dec = params["decoder"]
+
+            def mem_body(_, p):
+                k, v = attn.project_memory_kv(p["cross_attn"], memory, cfg)
+                return None, (k, v)
+
+            _, (mk, mv) = jax.lax.scan(mem_body, None, dec)
+            cache = dict(cache)
+            cache["mem_k"], cache["mem_v"] = mk, mv
+
+        if cfg.family == "vlm" and batch.get("frontend") is not None:
+            # ingest the patch-embedding prefix through the decode path
+            def patch_step(c, emb):
+                c, _ = self.decode_step(params, None, c,
+                                        embeds=emb[:, None, :])
+                return c, None
+
+            patches = batch["frontend"].astype(cfg.dtype)
+            cache, _ = jax.lax.scan(patch_step, cache,
+                                    patches.transpose(1, 0, 2))
+
+        def step(c, tok):
+            c, logits = self.decode_step(params, tok[:, None], c)
+            return c, logits
+
+        tokens = batch["tokens"]
+        cache, logits = jax.lax.scan(step, cache,
+                                     tokens.transpose(1, 0))
+        return cache, logits[-1]
+
+    def decode_step(self, params, tokens, cache, embeds=None):
+        """tokens: (B, 1) (or None with `embeds` (B, 1, d) — used to feed
+        frontend prefixes through the decode path). Returns
+        (cache, logits (B, vocab))."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens) if embeds is None else embeds
+        length = cache["length"]
+        cache = dict(cache)
+
+        if cfg.family in ("dense", "vlm"):
+            x, cache["kv"] = self._decode_kv_scan(
+                params["layers"], x, cache["kv"], length)
+        elif cfg.family == "moe":
+            if cfg.n_dense_layers:
+                x, cache["dense_kv"] = self._decode_kv_scan(
+                    params["dense_layers"], x, cache["dense_kv"], length)
+            if cfg.use_mla:
+                x, cache["ckv"], cache["kpe"] = self._decode_mla_scan(
+                    params["moe_layers"], x, cache["ckv"], cache["kpe"],
+                    length)
+            else:
+                x, cache["moe_kv"] = self._decode_kv_scan(
+                    params["moe_layers"], x, cache["moe_kv"], length,
+                    moe=True)
+        elif cfg.family == "ssm":
+            x, cache["conv"], cache["ssm"] = self._decode_ssm_scan(
+                params["layers"], x, cache["conv"], cache["ssm"])
+        elif cfg.family == "hybrid":
+            x, cache = self._decode_hybrid(params, x, cache, length)
+        elif cfg.family == "encdec":
+            x, cache["kv"] = self._decode_encdec_scan(
+                params["decoder"], x, cache["kv"], cache["mem_k"],
+                cache["mem_v"], length)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = unembed(params["embed"], x[:, 0], cfg.vocab_size)
+        cache["length"] = length + 1
+        return cache, logits
+
+    def _decode_kv_scan(self, stacked, x, kv, length, moe=False):
+        cfg = self.cfg
+
+        def body(h, xs):
+            p, k, v = xs
+            hn = rms_norm(h, p["ln1"])
+            a, k, v = attn.decode_attention_step(p["attn"], hn, k, v,
+                                                 length, cfg)
+            h = h + a
+            hn2 = rms_norm(h, p["ln2"])
+            if moe:
+                m, _ = moe_mod.moe_block(p["moe"], hn2, cfg)
+            else:
+                m = mlp(p["mlp"], hn2, cfg.mlp_type)
+            return h + m, (k, v)
+
+        x, (ks, vs) = uscan(body, x, (stacked, kv["k"], kv["v"]))
+        return x, {"k": ks, "v": vs}
+
+    def _decode_mla_scan(self, stacked, x, ckv, kpe, length):
+        cfg = self.cfg
+
+        def body(h, xs):
+            p, c1, c2 = xs
+            hn = rms_norm(h, p["ln1"])
+            a, c1, c2 = mla_mod.mla_decode_step(p["attn"], hn, c1, c2,
+                                                length, cfg)
+            h = h + a
+            m, _ = moe_mod.moe_block(p["moe"], rms_norm(h, p["ln2"]), cfg)
+            return h + m, (c1, c2)
+
+        x, (ckv, kpe) = uscan(body, x, (stacked, ckv, kpe))
+        return x, ckv, kpe
+
+    def _decode_ssm_scan(self, stacked, x, conv, ssm):
+        cfg = self.cfg
+
+        def body(h, xs):
+            p, c, s = xs
+            y, c, s = ssd_mod.ssd_decode_step(p["ssd"], rms_norm(h, p["ln"]),
+                                              c, s, cfg)
+            return h + y, (c, s)
+
+        x, (conv, ssm) = uscan(body, x, (stacked, conv, ssm))
+        return x, conv, ssm
+
+    def _decode_hybrid(self, params, x, cache, length):
+        cfg = self.cfg
+        pat = cfg.block_pattern
+        win = cache["kv"]["k"].shape[2]
+
+        def super_body(h, xs):
+            p, conv, hst, k, v = xs
+            ri, ai = 0, 0
+            new_conv, new_h, new_k, new_v = [], [], [], []
+            for i, kind in enumerate(pat):
+                q = p[f"b{i}_{kind}"]
+                hn = rms_norm(h, q["ln1"])
+                if kind == "attn":
+                    # ring-buffer sliding-window cache (size = window)
+                    a, nk, nv = attn.decode_attention_step(
+                        q["attn"], hn, k[ai], v[ai], length, cfg, ring=True)
+                    new_k.append(nk)
+                    new_v.append(nv)
+                    h = h + a
+                    ai += 1
+                else:
+                    t, nc, nh = rglru_mod.rglru_decode_step(
+                        q["rglru"], hn, conv[ri], hst[ri], cfg)
+                    new_conv.append(nc)
+                    new_h.append(nh)
+                    h = h + t
+                    ri += 1
+                h = h + mlp(q["mlp"], rms_norm(h, q["ln2"]), cfg.mlp_type)
+            out = (jnp.stack(new_conv) if new_conv else conv,
+                   jnp.stack(new_h) if new_h else hst,
+                   jnp.stack(new_k) if new_k else k,
+                   jnp.stack(new_v) if new_v else v)
+            return h, out
+
+        n_super = cache["conv"].shape[0]
+        n_att_per = sum(1 for kk in pat if kk == "attn")
+        kv_k = cache["kv"]["k"].reshape(n_super, n_att_per,
+                                        *cache["kv"]["k"].shape[1:])
+        kv_v = cache["kv"]["v"].reshape(n_super, n_att_per,
+                                        *cache["kv"]["v"].shape[1:])
+        x, (conv, hst, ks, vs) = uscan(
+            super_body, x,
+            (params["super"], cache["conv"], cache["h"], kv_k, kv_v))
+        cache["conv"], cache["h"] = conv, hst
+        cache["kv"] = {"k": ks.reshape(-1, *ks.shape[2:]),
+                       "v": vs.reshape(-1, *vs.shape[2:])}
+        if "tail" in params:
+            rem = cfg.n_layers % len(pat)
+
+            def tail_body(h, xs):
+                p, conv, hst = xs
+                new_conv, new_h = [], []
+                for i, kind in enumerate(pat[:rem]):
+                    q = p[f"b{i}_{kind}"]
+                    hn = rms_norm(h, q["ln1"])
+                    t, nc, nh = rglru_mod.rglru_decode_step(
+                        q["rglru"], hn, conv[i], hst[i], cfg)
+                    new_conv.append(nc)
+                    new_h.append(nh)
+                    h = h + t
+                    h = h + mlp(q["mlp"], rms_norm(h, q["ln2"]),
+                                cfg.mlp_type)
+                return h, (jnp.stack(new_conv), jnp.stack(new_h))
+
+            x, (tc, th) = uscan(
+                tail_body, x,
+                (params["tail"], cache["tail_conv"], cache["tail_h"]))
+            cache["tail_conv"], cache["tail_h"] = tc, th
+        return x, cache
+
+    def _decode_encdec_scan(self, stacked, x, kv, mem_k, mem_v, length):
+        cfg = self.cfg
+
+        def body(h, xs):
+            p, k, v, mk, mv = xs
+            hn = rms_norm(h, p["ln1"])
+            a, k, v = attn.decode_attention_step(p["self_attn"], hn, k, v,
+                                                 length, cfg)
+            h = h + a
+            h = h + attn.cross_attention_decode(
+                p["cross_attn"], rms_norm(h, p["ln_x"]), mk, mv, cfg)
+            h = h + mlp(p["mlp"], rms_norm(h, p["ln2"]), cfg.mlp_type)
+            return h, (k, v)
+
+        x, (ks, vs) = uscan(body, x, (stacked, kv["k"], kv["v"],
+                                             mem_k, mem_v))
+        return x, {"k": ks, "v": vs}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

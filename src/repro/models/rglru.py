@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (RecurrentGemma/Griffin, arXiv:2402.19427).
+
+The gated linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = a ^ (c * r_t),  a = sigmoid(lambda)
+is computed with jax.lax.associative_scan (log-depth) — the TPU-native
+replacement for the paper's fused GPU scan kernel. Decode carries the
+O(lru_width) hidden state, which (with the 2048-window local attention)
+is what makes recurrentgemma runnable at the long_500k cell.
+
+Block structure per Griffin: (conv1d -> RG-LRU) recurrent branch gated by
+a GeLU branch, then a linear out-projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, stack=()):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, w, cfg.dtype, (*stack, d, w)),
+        "w_gate": dense_init(ks[1], d, w, cfg.dtype, (*stack, d, w)),
+        "conv_w": (jax.random.normal(ks[2], (*stack, 4, w), jnp.float32)
+                   * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((*stack, w), cfg.dtype),
+        "w_r": dense_init(ks[3], w, w, cfg.dtype, (*stack, w, w)),
+        "w_i": dense_init(ks[4], w, w, cfg.dtype, (*stack, w, w)),
+        "lam": jnp.full((*stack, w), 3.0, jnp.float32),  # a ~ sigmoid(3)=.95
+        "w_out": dense_init(ks[5], w, d, cfg.dtype, (*stack, w, d)),
+    }
+
+
+def _conv(x, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + b
+
+
+def _gates(params, xw):
+    r = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", xw, params["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", xw, params["w_i"]).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(params["lam"])          # log a
+    log_a = _C * r * log_a_base[None, None, :]              # (B,S,W)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * i * xw.astype(jnp.float32)
+
+
+def rglru_block(params, x, cfg):
+    """Training/prefill. x: (B, S, d)."""
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dw->bsw", x, params["w_gate"]).astype(jnp.float32))
+    xw = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    xw = _conv(xw, params["conv_w"], params["conv_b"])
+    a, b_in = _gates(params, xw)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    y = (h * gate).astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+
+
+def rglru_decode_step(params, x, conv_state, h_state, cfg):
+    """One token. conv_state: (B, 3, W); h_state: (B, W) float32."""
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dw->bsw", x, params["w_gate"]).astype(jnp.float32))
+    xw = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    window = jnp.concatenate([conv_state, xw], axis=1)      # (B, 4, W)
+    conv_state = window[:, 1:]
+    xw = jnp.sum(window * params["conv_w"][None], axis=1,
+                 keepdims=True) + params["conv_b"]
+    a, b_in = _gates(params, xw)
+    h_state = a[:, 0] * h_state + b_in[:, 0]
+    y = (h_state[:, None, :] * gate).astype(x.dtype)
+    return (jnp.einsum("bsw,wd->bsd", y, params["w_out"]),
+            conv_state, h_state)

@@ -1,0 +1,177 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training uses the chunked block-decomposition: quadratic attention-like
+compute inside chunks (MXU-friendly (Q x Q) tiles) plus a linear
+inter-chunk state recurrence — the TPU-native adaptation of the paper's
+algorithm (the CUDA version fuses this per SM; here the chunk dimension
+becomes a lax.scan and each chunk's einsums map onto the MXU).
+
+Decode keeps the O(1) recurrent state h: (B, H, P, N):
+    h <- h * exp(dt*A) + dt * x (outer) B ;  y = C . h + D*x
+which is why mamba2 runs the long_500k cell with constant memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import uscan
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_ssd(key, cfg, stack=()):
+    d, di = cfg.d_model, cfg.d_inner
+    n, h_ = cfg.ssm_state, cfg.ssm_heads
+    g = 1  # single B/C group
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * g * n + h_
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, cfg.dtype,
+                              (*stack, d, proj_out)),
+        "conv_w": (jax.random.normal(ks[1], (*stack, cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((*stack, conv_dim), cfg.dtype),
+        "a_log": jnp.zeros((*stack, h_), jnp.float32),
+        "dt_bias": jnp.zeros((*stack, h_), jnp.float32),
+        "d_skip": jnp.ones((*stack, h_), jnp.float32),
+        "out_norm": jnp.zeros((*stack, di), cfg.dtype),
+        "out_proj": dense_init(ks[4], di, d, cfg.dtype, (*stack, di, d)),
+    }
+
+
+def _split_proj(params, x, cfg):
+    di, n, h_ = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z_x_b_c_dt = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    z = z_x_b_c_dt[..., :di]
+    xbc = z_x_b_c_dt[..., di:di + di + 2 * n]
+    dt = z_x_b_c_dt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width W. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(xh, dt, A, B, C, chunk: int):
+    """Chunked SSD. xh: (B, S, H, P); dt: (B, S, H); A: (H,) (negative);
+    B, C: (B, S, N). Returns (y, final_state (B, H, P, N))."""
+    b, s, h_, p = xh.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    r = lambda t: t.reshape(b, nc, chunk, *t.shape[2:])
+    xc, dtc = r(xh), r(dt)                     # (b,nc,q,h,p), (b,nc,q,h)
+    Bc, Cc = r(B), r(C)                        # (b,nc,q,n)
+
+    dA = dtc * A[None, None, None, :]          # (b,nc,q,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic in chunk, MXU-shaped)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # (b,nc,q,q)
+    gated = scores[:, :, None] * L                          # (b,nc,h,q,k)
+    xdt = xc * dtc[..., None]                               # (b,nc,q,h,p)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", gated, xdt)
+
+    # chunk states
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_out, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (b,nc,h)
+
+    def step(h_prev, xs):
+        st, dec = xs                                        # (b,h,p,n),(b,h)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((b, h_, p, n), jnp.float32)
+    # plain scan even in analysis mode: the recurrence body is O(b*h*p*n)
+    # per chunk — negligible next to the intra-chunk einsums above, and
+    # unrolling 256 chunk steps only bloats compile time
+    final, h_prevs = jax.lax.scan(
+        step, init, (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)              # (b,nc,h,p,n)
+
+    decay_in = jnp.exp(dA_cs)                                # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, decay_in,
+                       h_prevs.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(b, s, h_, p)
+    return y, final
+
+
+def ssd_block(params, x, cfg):
+    """Full mamba2 block for training/prefill. x: (B, S, d)."""
+    b, s, d = x.shape
+    di, n, h_, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt = _split_proj(params, x, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, B, C = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["a_log"])
+    xh = xs.reshape(b, s, h_, p)
+    pad = (-s) % cfg.ssd_chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, _ = ssd_scan(xh.astype(jnp.float32), dt, A,
+                    B.astype(jnp.float32), C.astype(jnp.float32),
+                    cfg.ssd_chunk)
+    y = y[:, :s] + params["d_skip"][None, None, :, None] \
+        * xh[:, :s].astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["out_norm"])
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+
+
+def ssd_decode_step(params, x, conv_state, ssm_state, cfg):
+    """One-token decode. x: (B, 1, d); conv_state: (B, W-1, conv_dim);
+    ssm_state: (B, H, P, N). Returns (out, conv_state, ssm_state)."""
+    b = x.shape[0]
+    di, n, h_, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt = _split_proj(params, x, cfg)
+    # conv over the rolling window
+    window = jnp.concatenate([conv_state, xbc], axis=1)     # (B, W, C)
+    conv_state = window[:, 1:]
+    w = params["conv_w"]
+    out = jnp.sum(window * w[None], axis=1, keepdims=True) + params["conv_b"]
+    xbc = jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+    xs, B, C = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])[:, 0]  # (B,H)
+    A = -jnp.exp(params["a_log"])
+    xh = xs.reshape(b, h_, p).astype(jnp.float32)
+    Bv = B[:, 0].astype(jnp.float32)                        # (B, N)
+    Cv = C[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                        # (B, H)
+    upd = (dt[..., None, None] * xh[..., None]
+           * Bv[:, None, None, :])                          # (B,H,P,N)
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cv)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["out_norm"])
+    return (jnp.einsum("bsi,id->bsd", y, params["out_proj"]),
+            conv_state, ssm_state)

@@ -1,0 +1,2 @@
+"""Serving substrate: KV-cache engine + Spork-scheduled heterogeneous
+request routing (the paper's technique as a first-class feature)."""

@@ -1,0 +1,101 @@
+"""Model serving engine: batched prefill/decode over the unified Model
+API, with deadline-tracked request slots (continuous batching).
+
+The engine owns one model replica ("worker" in the paper's vocabulary).
+Requests enter slots; every step decodes one token for all active slots.
+Per-slot lengths drive the ragged attention masks (the decode_attn kernel
+takes per-batch lengths natively).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    deadline_s: float = float("inf")
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, batch_slots: int = 8,
+                 max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.active: list[Request | None] = [None] * batch_slots
+        self._decode = jax.jit(model.decode_step)
+
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def add_request(self, req: Request) -> bool:
+        """Admit a request into a free slot (prefill its prompt)."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self.active[slot] = req
+        # sequential prefill through the decode path, one slot at a time:
+        # correct and simple; batched prefill is a serving optimization the
+        # roofline work covers separately.
+        cache = self.cache
+        for tok in req.prompt:
+            tokens = np.zeros((self.slots, 1), np.int32)
+            tokens[slot, 0] = tok
+            cache = self._step_only_slot(cache, tokens, slot)
+        self.cache = cache
+        return True
+
+    def _step_only_slot(self, cache, tokens, slot):
+        """Advance one slot's length without disturbing others: lengths are
+        per-slot, so we mask the length increment."""
+        new_cache, _ = self._decode(self.params, jnp.asarray(tokens), cache)
+        # decode_step increments every slot's length; undo for others
+        mask = np.zeros((self.slots,), np.int32)
+        mask[slot] = 1
+        fixed = cache["length"] + jnp.asarray(mask)
+        new_cache["length"] = fixed
+        return new_cache
+
+    def step(self) -> list[tuple[int, int]]:
+        """Decode one token for all active slots; returns (rid, token)."""
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None:
+                tokens[i, 0] = (r.generated[-1] if r.generated
+                                else (r.prompt[-1] if len(r.prompt) else 0))
+        self.cache, logits = self._decode(self.params, jnp.asarray(tokens),
+                                          self.cache)
+        out = []
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(next_tokens[i])
+            r.generated.append(tok)
+            out.append((r.rid, tok))
+            if len(r.generated) >= r.max_new_tokens:
+                r.done = True
+                self.active[i] = None
+        return out
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)

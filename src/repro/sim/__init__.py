@@ -1,0 +1,9 @@
+"""Simulation engines for the Spork evaluation.
+
+`ratesim` — vectorized interval/second-level simulator in JAX (jit + vmap
+over traces and worker parameters; shard_map over device meshes for large
+sweeps). The workhorse for every rate-level experiment.
+
+`events` — exact discrete-event simulator (per-request semantics) used for
+dispatch-policy studies (paper Table 9) and as ground truth in tests.
+"""

@@ -1,0 +1,464 @@
+"""Vectorized rate-level simulator for hybrid/homogeneous platforms (JAX).
+
+Semantics (1-second fluid buckets, faithful to the paper's rate-based
+methodology, §3 and §5.1):
+
+  * Arrivals: Poisson-sampled per-second request counts from a Trace.
+  * FPGA pool: allocations issued by the per-interval policy arrive after
+    the spin-up latency (pending ring buffer); workers draw busy power
+    while reconfiguring; idle workers are reclaimed after sitting fully
+    idle for the idle timeout (= one scheduling interval). Packing-style
+    dispatch is modeled by serving with the lowest-index worker slots
+    first, so the reclaimable set is the top slots.
+  * CPU pool: allocated on the dispatch path within a second (5 ms spin-up
+    << 1 s), reclaimed after a short idle timeout (1 s fluid model).
+  * FPGA-only policies have no CPU fallback: excess work queues; a request
+    misses its deadline when its queueing delay exceeds deadline - service
+    time.
+
+Policies: 'spork' (E/C/B via objective weight), 'spork_ideal',
+'cpu_dynamic', 'fpga_static', 'fpga_dynamic', 'mark_ideal'.
+
+Everything is jittable; `simulate_batch` vmaps over traces, and worker
+parameters are traced scalars so sensitivity sweeps (Figs. 5-7) vmap over
+them too. Scheduling-interval length and spin-up seconds are static (they
+set scan lengths / ring sizes), so sweeps over spin-up re-jit per value.
+
+The exact event-driven simulator (sim.events) is ground truth; tests
+assert the two agree on energy/cost within tolerance on small traces.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.breakeven import ObjectiveCoeffs
+from repro.core.metrics import RunTotals
+from repro.core.predictor import amortization_vector, expected_objective_jnp
+from repro.core.workers import FleetParams
+
+POLICIES = ("spork", "spork_ideal", "cpu_dynamic", "fpga_static",
+            "fpga_dynamic", "mark_ideal")
+
+
+class FleetScalars(NamedTuple):
+    """Traced worker parameters (vmappable for sweeps)."""
+
+    S: jnp.ndarray          # FPGA speedup over CPU
+    B_f: jnp.ndarray        # FPGA busy W
+    I_f: jnp.ndarray        # FPGA idle W
+    B_c: jnp.ndarray        # CPU busy W
+    I_c: jnp.ndarray        # CPU idle W
+    C_f: jnp.ndarray        # FPGA $/s
+    C_c: jnp.ndarray        # CPU $/s
+    a_c: jnp.ndarray        # CPU spin-up energy J
+    A_c_s: jnp.ndarray      # CPU spin-up seconds
+    d_f: jnp.ndarray        # FPGA spin-down energy J
+    d_f_s: jnp.ndarray      # FPGA spin-down seconds
+    d_c: jnp.ndarray        # CPU spin-down energy J
+
+    @staticmethod
+    def from_fleet(fleet: FleetParams) -> "FleetScalars":
+        f32 = lambda x: jnp.float32(x)
+        return FleetScalars(
+            S=f32(fleet.S), B_f=f32(fleet.fpga.busy_w), I_f=f32(fleet.fpga.idle_w),
+            B_c=f32(fleet.cpu.busy_w), I_c=f32(fleet.cpu.idle_w),
+            C_f=f32(fleet.fpga.cost_per_s), C_c=f32(fleet.cpu.cost_per_s),
+            a_c=f32(fleet.cpu.spin_up_energy_j), A_c_s=f32(fleet.cpu.spin_up_s),
+            d_f=f32(fleet.fpga.spin_down_energy_j), d_f_s=f32(fleet.fpga.spin_down_s),
+            d_c=f32(fleet.cpu.spin_down_energy_j),
+        )
+
+
+def coeffs_in_graph(fs: FleetScalars, interval_s: float, spin_up_s: float,
+                    energy_weight) -> tuple[ObjectiveCoeffs, jnp.ndarray]:
+    """In-graph twin of core.breakeven (tested equal in tests/test_breakeven).
+
+    Returns (Alg.-2 objective coefficients, breakeven threshold T_b)."""
+    T = jnp.float32(interval_s)
+    w = jnp.clip(jnp.float32(energy_weight), 0.0, 1.0)
+    e = ObjectiveCoeffs(fs.B_f * T, fs.I_f * T, fs.S * fs.B_c * T,
+                        fs.B_f * spin_up_s)
+    c = ObjectiveCoeffs(fs.C_f * T, fs.C_f * T, fs.S * fs.C_c * T,
+                        fs.C_f * spin_up_s)
+    e_unit, c_unit = fs.B_f * T, fs.C_f * T
+    mix = ObjectiveCoeffs(*[w * ev / e_unit + (1 - w) * cv / c_unit
+                            for ev, cv in zip(e, c)])
+    # breakeven thresholds
+    den = fs.B_c - fs.B_f / fs.S + fs.I_f / fs.S
+    tb_e = jnp.where(den > 0, T * fs.I_f / jnp.maximum(den, 1e-9), jnp.inf)
+    tb_c = T * fs.C_f / (fs.S * fs.C_c)
+    tb = w * jnp.minimum(tb_e, T) + (1 - w) * tb_c
+    return mix, tb
+
+
+class Accum(NamedTuple):
+    fpga_busy_j: jnp.ndarray
+    fpga_idle_j: jnp.ndarray
+    cpu_busy_j: jnp.ndarray
+    cpu_idle_j: jnp.ndarray
+    spin_j: jnp.ndarray
+    cost: jnp.ndarray
+    work_f: jnp.ndarray       # CPU-seconds served on FPGAs
+    work_c: jnp.ndarray       # CPU-seconds served on CPUs
+    missed_requests: jnp.ndarray
+    fpga_spinups: jnp.ndarray
+    cpu_spinups: jnp.ndarray
+
+    @staticmethod
+    def zero() -> "Accum":
+        z = jnp.float32(0.0)
+        return Accum(z, z, z, z, z, z, z, z, z, z, z)
+
+
+class SimState(NamedTuple):
+    up: jnp.ndarray               # FPGAs spun up
+    pending: jnp.ndarray          # (pending_max,) arriving in k seconds
+    used_ring: jnp.ndarray        # (interval_s,) used FPGAs per past second
+    young_ring: jnp.ndarray       # (interval_s,) spin-up completions per second
+    alloc_time: jnp.ndarray       # (n_max,) per-slot alloc timestamps
+    H: jnp.ndarray                # (n_max, n_max) conditional histograms
+    life_sum: jnp.ndarray         # (n_max,)
+    life_cnt: jnp.ndarray         # (n_max,)
+    n_lag: jnp.ndarray            # (2,) needed counts [lag1, lag2]
+    F_acc: jnp.ndarray            # FPGA busy seconds this interval
+    C_acc: jnp.ndarray            # CPU work (cpu-s) this interval
+    cpu_prev: jnp.ndarray         # CPU workers used last second
+    queue: jnp.ndarray            # queued work (FPGA-only policies)
+    t: jnp.ndarray                # seconds elapsed
+    accum: Accum
+
+
+def _second_step(policy: str, interval_s: int, spin_up_s: int, n_max: int,
+                 fs: FleetScalars, size_s, headroom, state: SimState,
+                 arrivals) -> SimState:
+    """Advance one second: arrivals -> spin-up completions -> serving ->
+    reclaim -> accounting. `arrivals` is the request count this second."""
+    dt = jnp.float32(1.0)
+    W = arrivals.astype(jnp.float32) * size_s           # CPU-seconds of demand
+    acc = state.accum
+
+    # --- spin-up completions ---
+    completions = state.pending[0]
+    pending = jnp.concatenate([state.pending[1:], jnp.zeros((1,), jnp.int32)])
+    up = state.up + completions
+    idx = jnp.arange(n_max)
+    alloc_time = jnp.where((idx >= state.up) & (idx < up),
+                           state.t.astype(jnp.float32), state.alloc_time)
+
+    # --- serving ---
+    allow_cpu = policy in ("spork", "spork_ideal", "cpu_dynamic", "mark_ideal")
+    cap_f = up.astype(jnp.float32) * fs.S * dt
+    if policy == "mark_ideal":
+        # Round-robin split: each up worker receives an equal request share.
+        n_c_prev = state.cpu_prev.astype(jnp.float32)
+        n_tot = up.astype(jnp.float32) + n_c_prev
+        share_c = jnp.where(n_tot > 0, n_c_prev / jnp.maximum(n_tot, 1.0), 0.0)
+        cpu_work0 = jnp.minimum(W * share_c, n_c_prev * dt)
+        fpga_work = jnp.minimum(W - cpu_work0, cap_f)
+        residual = jnp.maximum(W - cpu_work0 - fpga_work, 0.0)
+        cpu_work = cpu_work0 + residual
+        queue = state.queue
+        missed = jnp.float32(0.0)
+    elif allow_cpu:
+        fpga_work = jnp.minimum(W, cap_f)
+        cpu_work = W - fpga_work
+        queue = state.queue
+        missed = jnp.float32(0.0)
+    else:
+        # FPGA-only: FIFO fluid queue; miss when delay exceeds slack.
+        backlog = state.queue + W
+        fpga_work = jnp.minimum(backlog, cap_f)
+        cpu_work = jnp.float32(0.0)
+        queue = backlog - fpga_work
+        slack = 10.0 * size_s - size_s / fs.S
+        delay = queue / jnp.maximum(cap_f, 1e-6)
+        missed = jnp.where(delay > slack, arrivals.astype(jnp.float32), 0.0)
+
+    busy_f = fpga_work / fs.S                            # FPGA busy seconds
+    used_f = jnp.ceil(busy_f / dt - 1e-6).astype(jnp.int32)
+
+    # --- CPU pool (dispatch-path allocation, 1 s idle timeout) ---
+    n_cpu = jnp.ceil(cpu_work / dt - 1e-6).astype(jnp.int32)
+    if policy == "mark_ideal":
+        # RR keeps every worker receiving requests alive.
+        keep = arrivals >= (up + state.cpu_prev)
+        cpu_alive = jnp.maximum(n_cpu, jnp.where(keep, state.cpu_prev, 0))
+    else:
+        cpu_alive = jnp.maximum(n_cpu, state.cpu_prev)   # 1 s linger
+    new_cpus = jnp.maximum(n_cpu - state.cpu_prev, 0).astype(jnp.float32)
+
+    # --- idle reclaim (not for fpga_static) ---
+    used_ring = state.used_ring.at[state.t % interval_s].set(used_f)
+    young_ring = state.young_ring.at[state.t % interval_s].set(completions)
+    if policy == "fpga_static":
+        dealloc = jnp.int32(0)
+    else:
+        protected = jnp.maximum(jnp.max(used_ring), jnp.sum(young_ring))
+        if policy == "fpga_dynamic":
+            protected = jnp.maximum(protected,
+                                    used_f + headroom.astype(jnp.int32))
+        dealloc = jnp.maximum(up - protected, 0)
+    up_next = up - dealloc
+    dmask = (idx >= up_next) & (idx < up)
+    life_sum = state.life_sum + jnp.where(
+        dmask, state.t.astype(jnp.float32) - alloc_time, 0.0)
+    life_cnt = state.life_cnt + dmask.astype(jnp.float32)
+
+    # --- accounting ---
+    upf = up.astype(jnp.float32)
+    pend_tot = jnp.sum(pending).astype(jnp.float32)
+    dealloc_f32 = dealloc.astype(jnp.float32)
+    acc = Accum(
+        fpga_busy_j=acc.fpga_busy_j + busy_f * fs.B_f,
+        fpga_idle_j=acc.fpga_idle_j + (upf * dt - busy_f) * fs.I_f,
+        cpu_busy_j=acc.cpu_busy_j + cpu_work * fs.B_c,
+        cpu_idle_j=acc.cpu_idle_j
+        + (cpu_alive.astype(jnp.float32) * dt - cpu_work) * fs.I_c,
+        spin_j=acc.spin_j + pend_tot * fs.B_f * dt + dealloc_f32 * fs.d_f
+        + new_cpus * fs.a_c,
+        cost=acc.cost + (upf + pend_tot) * fs.C_f * dt
+        + dealloc_f32 * fs.C_f * fs.d_f_s
+        + cpu_alive.astype(jnp.float32) * fs.C_c * dt + new_cpus * fs.C_c * fs.A_c_s,
+        work_f=acc.work_f + fpga_work,
+        work_c=acc.work_c + cpu_work,
+        missed_requests=acc.missed_requests + missed,
+        fpga_spinups=acc.fpga_spinups,
+        cpu_spinups=acc.cpu_spinups + new_cpus,
+    )
+
+    return SimState(
+        up=up_next, pending=pending, used_ring=used_ring, young_ring=young_ring,
+        alloc_time=alloc_time, H=state.H, life_sum=life_sum, life_cnt=life_cnt,
+        n_lag=state.n_lag, F_acc=state.F_acc + busy_f, C_acc=state.C_acc + cpu_work,
+        cpu_prev=cpu_alive if policy == "mark_ideal" else n_cpu,
+        queue=queue, t=state.t + 1, accum=acc)
+
+
+def _needed_fpgas(lam, interval_s, tb):
+    """Alg. 1 NeededFPGAs: floor + breakeven rounding. lam in FPGA-seconds."""
+    n = jnp.floor(lam / interval_s)
+    frac = lam - n * interval_s
+    return (n + (frac > tb)).astype(jnp.int32)
+
+
+def _interval_tick(policy: str, interval_s: int, spin_up_s: int, n_max: int,
+                   fs: FleetScalars, coeffs: ObjectiveCoeffs, tb,
+                   state: SimState, xs, headroom) -> SimState:
+    """Start-of-interval allocation decision (Alg. 1 for Spork)."""
+    next_true_needed, next_W, next2_W, static_level = xs
+    n_curr = state.up + jnp.sum(state.pending)
+
+    if policy in ("cpu_dynamic",):
+        return state._replace(F_acc=jnp.float32(0), C_acc=jnp.float32(0))
+
+    if policy == "fpga_dynamic":
+        # Reactive autoscaler at allocation-interval granularity (Table 4,
+        # "long-term"): minimum FPGAs for the load just observed + fixed
+        # headroom; spin-ups land one interval later. Downsizing via the
+        # standard idle timeout (headroom is protected in _second_step).
+        lam_prev = state.F_acc + state.C_acc / fs.S
+        needed_now = jnp.ceil(lam_prev / jnp.float32(interval_s)).astype(jnp.int32)
+        target = needed_now + headroom.astype(jnp.int32)
+        new = jnp.maximum(target - n_curr, 0)
+        new = jnp.maximum(jnp.minimum(new, n_max - 1 - n_curr), 0)
+        pending = state.pending.at[spin_up_s - 1].add(new)
+        acc = state.accum._replace(
+            fpga_spinups=state.accum.fpga_spinups + new.astype(jnp.float32))
+        return state._replace(pending=pending, accum=acc,
+                              F_acc=jnp.float32(0), C_acc=jnp.float32(0))
+
+    if policy == "fpga_static":
+        new = jnp.maximum(static_level - n_curr, 0)
+        # provisioned before the trace starts: arrives immediately (warm),
+        # spin-up energy/cost still charged below via accounting.
+        up = state.up + new
+        acc = state.accum
+        acc = acc._replace(
+            spin_j=acc.spin_j + new.astype(jnp.float32) * fs.B_f * spin_up_s,
+            cost=acc.cost + new.astype(jnp.float32) * fs.C_f * spin_up_s,
+            fpga_spinups=acc.fpga_spinups + new.astype(jnp.float32))
+        return state._replace(up=up, accum=acc,
+                              F_acc=jnp.float32(0), C_acc=jnp.float32(0))
+
+    if policy == "mark_ideal":
+        # Perfect demand knowledge two intervals ahead (§5.1): allocate for
+        # the next interval, downsize only what neither of the next two
+        # intervals needs (cost-breakeven rounding throughout). The
+        # predictive controller also releases surplus on-demand CPUs.
+        tb_cost = jnp.float32(interval_s) * fs.C_f / (fs.S * fs.C_c)
+        t1 = _needed_fpgas(next_W / fs.S, jnp.float32(interval_s), tb_cost)
+        t2 = _needed_fpgas(next2_W / fs.S, jnp.float32(interval_s), tb_cost)
+        target = jnp.minimum(t1, n_max - 1)
+        keep_floor = jnp.minimum(jnp.maximum(t1, t2), n_max - 1)
+        new = jnp.maximum(target - n_curr, 0)
+        drop = jnp.maximum(state.up - keep_floor, 0)
+        pending = state.pending.at[spin_up_s - 1].add(new)
+        cap_next = target.astype(jnp.float32) * fs.S * jnp.float32(interval_s)
+        cpu_needed = jnp.ceil(
+            jnp.maximum(next_W - cap_next, 0.0) / jnp.float32(interval_s)
+        ).astype(jnp.int32)
+        cpu_prev = jnp.minimum(state.cpu_prev, cpu_needed)
+        idx = jnp.arange(n_max)
+        up_next = state.up - drop
+        dmask = (idx >= up_next) & (idx < state.up)
+        life_sum = state.life_sum + jnp.where(
+            dmask, state.t.astype(jnp.float32) - state.alloc_time, 0.0)
+        life_cnt = state.life_cnt + dmask.astype(jnp.float32)
+        acc = state.accum
+        acc = acc._replace(
+            fpga_spinups=acc.fpga_spinups + new.astype(jnp.float32),
+            spin_j=acc.spin_j + drop.astype(jnp.float32) * fs.d_f,
+            cost=acc.cost + drop.astype(jnp.float32) * fs.C_f * fs.d_f_s)
+        return state._replace(pending=pending, up=up_next, life_sum=life_sum,
+                              life_cnt=life_cnt, accum=acc, cpu_prev=cpu_prev,
+                              F_acc=jnp.float32(0), C_acc=jnp.float32(0))
+
+    # --- Spork variants ---
+    lam = state.F_acc + state.C_acc / fs.S               # FPGA-seconds
+    n_needed = _needed_fpgas(lam, jnp.float32(interval_s), tb)
+    n_needed = jnp.minimum(n_needed, n_max - 1)
+    H = state.H.at[state.n_lag[1], n_needed].add(1.0)
+    n_lag = jnp.stack([n_needed, state.n_lag[0]])
+
+    if policy == "spork_ideal":
+        target = jnp.minimum(next_true_needed, n_max - 1)
+    else:
+        hist = H[n_needed]
+        amort = amortization_vector(state.life_sum, state.life_cnt,
+                                    n_curr, jnp.float32(interval_s),
+                                    coeffs.amort_unit)
+        j = expected_objective_jnp(hist, coeffs, amort)
+        best = jnp.argmin(j).astype(jnp.int32)
+        target = jnp.where(jnp.sum(hist) <= 0, n_needed, best)
+
+    new = jnp.maximum(target - n_curr, 0)
+    new = jnp.minimum(new, n_max - 1 - n_curr)
+    pending = state.pending.at[spin_up_s - 1].add(new)
+    acc = state.accum._replace(
+        fpga_spinups=state.accum.fpga_spinups + new.astype(jnp.float32))
+    return state._replace(pending=pending, H=H, n_lag=n_lag, accum=acc,
+                          F_acc=jnp.float32(0), C_acc=jnp.float32(0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "interval_s", "spin_up_s", "n_max", "horizon_s"))
+def _simulate(policy: str, interval_s: int, spin_up_s: int, n_max: int,
+              horizon_s: int, counts: jnp.ndarray, size_s, fs: FleetScalars,
+              energy_weight, headroom, static_level) -> Accum:
+    k = horizon_s // interval_s
+    counts = counts[:k * interval_s].reshape(k, interval_s).astype(jnp.int32)
+    W_per_interval = jnp.sum(counts, axis=1).astype(jnp.float32) * size_s
+    next_W = jnp.concatenate([W_per_interval[1:], jnp.zeros((1,))])
+    next2_W = jnp.concatenate([W_per_interval[2:], jnp.zeros((2,))])
+    coeffs, tb = coeffs_in_graph(fs, interval_s, spin_up_s, energy_weight)
+    # true needed counts for the *next* interval (ideal variants)
+    next_true = _needed_fpgas(next_W / fs.S, jnp.float32(interval_s), tb)
+
+    # fpga_dynamic starts warm (pre-warmed reactive autoscaler): initial
+    # capacity for the first second's demand + headroom, spin-up charged.
+    init_up = jnp.int32(0)
+    init_spin = jnp.float32(0.0)
+    if policy == "fpga_dynamic":
+        w0 = counts[0, 0].astype(jnp.float32) * size_s
+        init_up = (jnp.ceil(w0 / fs.S).astype(jnp.int32)
+                   + headroom.astype(jnp.int32))
+        init_spin = init_up.astype(jnp.float32)
+    acc0 = Accum.zero()._replace(
+        spin_j=init_spin * fs.B_f * spin_up_s,
+        cost=init_spin * fs.C_f * spin_up_s,
+        fpga_spinups=init_spin)
+
+    state = SimState(
+        up=init_up, pending=jnp.zeros((max(spin_up_s, 1) + 1,), jnp.int32),
+        used_ring=jnp.zeros((interval_s,), jnp.int32),
+        young_ring=jnp.zeros((interval_s,), jnp.int32),
+        alloc_time=jnp.zeros((n_max,), jnp.float32),
+        H=jnp.zeros((n_max, n_max), jnp.float32),
+        life_sum=jnp.zeros((n_max,), jnp.float32),
+        life_cnt=jnp.zeros((n_max,), jnp.float32),
+        n_lag=jnp.zeros((2,), jnp.int32), F_acc=jnp.float32(0),
+        C_acc=jnp.float32(0), cpu_prev=jnp.int32(0), queue=jnp.float32(0),
+        t=jnp.int32(0), accum=acc0)
+
+    def interval_body(st, xs):
+        nt, nw, nw2, cnts = xs
+        st = _interval_tick(policy, interval_s, spin_up_s, n_max, fs, coeffs,
+                            tb, st, (nt, nw, nw2, static_level), headroom)
+
+        def sec_body(s, a):
+            return _second_step(policy, interval_s, spin_up_s, n_max, fs,
+                                size_s, headroom, s, a), None
+
+        st, _ = jax.lax.scan(sec_body, st, cnts)
+        return st, None
+
+    state, _ = jax.lax.scan(interval_body, state,
+                            (next_true, next_W, next2_W, counts))
+    # Closing: spin down everything still up.
+    upf = state.up.astype(jnp.float32)
+    acc = state.accum
+    acc = acc._replace(spin_j=acc.spin_j + upf * fs.d_f,
+                       cost=acc.cost + upf * fs.C_f * fs.d_f_s)
+    return acc
+
+
+def accum_to_totals(acc: Accum, total_work: float, total_requests: int) -> RunTotals:
+    g = lambda x: float(np.asarray(x))
+    energy = (g(acc.fpga_busy_j) + g(acc.fpga_idle_j) + g(acc.cpu_busy_j)
+              + g(acc.cpu_idle_j) + g(acc.spin_j))
+    return RunTotals(
+        energy_j=energy, cost_usd=g(acc.cost), work_cpu_s=total_work,
+        work_on_fpga_cpu_s=g(acc.work_f), work_on_cpu_cpu_s=g(acc.work_c),
+        requests=total_requests, deadline_misses=int(g(acc.missed_requests)),
+        fpga_spinups=int(g(acc.fpga_spinups)), cpu_spinups=int(g(acc.cpu_spinups)),
+        fpga_idle_j=g(acc.fpga_idle_j), fpga_busy_j=g(acc.fpga_busy_j),
+        cpu_busy_j=g(acc.cpu_busy_j), spinup_j=g(acc.spin_j))
+
+
+def simulate(policy: str, counts: np.ndarray, size_s: float,
+             fleet: FleetParams, energy_weight: float = 1.0,
+             headroom: int = 0, n_max: int = 512) -> RunTotals:
+    """Run one policy on one trace; returns paper-style totals."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}")
+    interval_s = max(int(round(fleet.T_s)), 1)
+    spin_up_s = max(int(round(fleet.fpga.spin_up_s)), 1)
+    horizon = (len(counts) // interval_s) * interval_s
+    counts = np.asarray(counts[:horizon])
+    fs = FleetScalars.from_fleet(fleet)
+    static_level = jnp.int32(0)
+    if policy == "fpga_static":
+        peak = np.max(counts.astype(np.float64) * size_s / fleet.S)
+        static_level = jnp.int32(min(int(np.ceil(peak)), n_max - 1))
+    acc = _simulate(policy, interval_s, spin_up_s, n_max, horizon,
+                    jnp.asarray(counts), jnp.float32(size_s), fs,
+                    jnp.float32(energy_weight), jnp.int32(headroom),
+                    static_level)
+    total_work = float(np.sum(counts) * size_s)
+    return accum_to_totals(acc, total_work, int(np.sum(counts)))
+
+
+def tune_fpga_dynamic(counts: np.ndarray, size_s: float, fleet: FleetParams,
+                      n_max: int = 512, max_k: int = 32) -> tuple[int, RunTotals]:
+    """§5.1: least headroom (integer multiples of the max consecutive-interval
+    demand delta, in workers) with zero deadline misses."""
+    interval_s = max(int(round(fleet.T_s)), 1)
+    k_int = (len(counts) // interval_s)
+    W = (np.asarray(counts[:k_int * interval_s], dtype=np.float64)
+         .reshape(k_int, interval_s).sum(1) * size_s)
+    unit = max(1, int(np.ceil(np.max(np.abs(np.diff(W))) / (fleet.S * interval_s))))
+    best = None
+    for k in range(0, max_k + 1):
+        tot = simulate("fpga_dynamic", counts, size_s, fleet,
+                       headroom=k * unit, n_max=n_max)
+        best = (k * unit, tot)
+        if tot.deadline_misses == 0:
+            break
+    return best

@@ -1,0 +1,108 @@
+"""Train/serve step factories: the functions the launchers jit and the
+dry-run lowers.
+
+make_train_step builds a pure (train_state, batch) -> (train_state,
+metrics) function: loss + grad (+ optional grad accumulation, global-norm
+clipping, error-feedback int8 compression) + AdamW. make_serve_step builds
+(params, cache, tokens) -> (cache, logits) for decode shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (compress_decompress,
+                                           init_error_feedback)
+from repro.models.model import Model
+from repro.train.optim import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule)
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: AdamWState
+    ef: object | None          # error-feedback residuals (or None)
+
+
+def init_train_state(model: Model, key, compress: bool = False) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      ef=init_error_feedback(params) if compress else None)
+
+
+def make_train_step(model: Model, base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, clip_norm: float = 1.0,
+                    accum_steps: int = 1, compress: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With accum_steps > 1 the batch's leading axis is split into microbatches
+    reduced with a lax.scan (compute/communication overlap is XLA's job;
+    the hillclimb may replace this with explicit shard_map scheduling)."""
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                *x.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), micro)
+        scale = 1.0 / accum_steps
+        grads = jax.tree_util.tree_map(lambda g: g * scale, gsum)
+        return loss_sum * scale, {}, grads
+
+    def train_step(state: TrainState, batch):
+        loss, metrics, grads = compute_grads(state.params, batch)
+        ef = state.ef
+        if compress:
+            grads, ef = compress_decompress(grads, ef)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state.opt.step)
+        params, opt = adamw_update(grads, state.opt, state.params, lr)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out_metrics.update(metrics)
+        return TrainState(params=params, opt=opt, ef=ef), out_metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """decode one token: (params, cache, tokens (B,1)) -> (cache, logits)."""
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, tokens, cache)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model):
+    """Full-sequence forward for prefill shapes: returns last-position
+    logits + the final hidden-free cost profile the roofline reads."""
+
+    def prefill_step(params, batch):
+        logits, aux = model.forward(params, batch["tokens"],
+                                    frontend=batch.get("frontend"))
+        return logits[:, -1]
+
+    return prefill_step

@@ -1,0 +1,43 @@
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bmodel import bmodel_rates_np, bmodel_series
+
+
+@given(bias=st.floats(0.5, 0.75), seed=st.integers(0, 2**31 - 1),
+       levels=st.integers(1, 10))
+@settings(max_examples=25, deadline=None)
+def test_volume_conserved_and_nonnegative(bias, seed, levels):
+    total = 1000.0
+    s = np.asarray(bmodel_series(jax.random.PRNGKey(seed), bias, levels, total))
+    assert s.shape == (2 ** levels,)
+    assert np.all(s >= 0)
+    np.testing.assert_allclose(s.sum(), total, rtol=1e-4)
+
+
+def test_uniform_at_half():
+    s = np.asarray(bmodel_series(jax.random.PRNGKey(0), 0.5, 8, 256.0))
+    np.testing.assert_allclose(s, np.ones(256), rtol=1e-5)
+
+
+def test_burstiness_increases_variability():
+    stds = []
+    for b in (0.5, 0.6, 0.7, 0.75):
+        runs = [bmodel_rates_np(seed, b, 512, 100.0).std() for seed in range(5)]
+        stds.append(np.mean(runs))
+    assert stds[0] < stds[1] < stds[2] < stds[3]
+
+
+def test_high_burstiness_has_large_consecutive_jumps():
+    # paper: b=0.75 implies >20x load difference between some consecutive
+    # intervals
+    r = bmodel_rates_np(1, 0.75, 4096, 100.0)
+    ratio = (r[1:] + 1e-9) / (r[:-1] + 1e-9)
+    assert max(ratio.max(), (1 / ratio).max()) > 20.0
+
+
+def test_mean_rate_respected():
+    r = bmodel_rates_np(2, 0.7, 4096, 123.0)
+    np.testing.assert_allclose(r.mean(), 123.0, rtol=1e-3)

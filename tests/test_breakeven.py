@@ -1,0 +1,58 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import breakeven as bk
+from repro.core.workers import DEFAULT_FLEET, FleetParams
+from repro.sim.ratesim import FleetScalars, coeffs_in_graph
+
+
+def test_eq1_identity():
+    """T_b satisfies Eq. 1 exactly."""
+    fleet = DEFAULT_FLEET
+    tb = bk.energy_breakeven_s(fleet)
+    S, Ts = fleet.S, fleet.T_s
+    lhs = tb * fleet.cpu.busy_w
+    rhs = tb / S * fleet.fpga.busy_w + (Ts - tb / S) * fleet.fpga.idle_w
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-12)
+
+
+def test_default_values():
+    fleet = DEFAULT_FLEET
+    # defaults: T_s=10, I_f=20, B_c=150, B_f=50, S=2 -> 200/135
+    np.testing.assert_allclose(bk.energy_breakeven_s(fleet), 200.0 / 135.0)
+    np.testing.assert_allclose(bk.cost_breakeven_s(fleet),
+                               10 * 0.982 / (2 * 0.668))
+
+
+def test_breakeven_below_interval():
+    # an FPGA must pay off within one interval for the rounding rule to be
+    # meaningful
+    assert 0 < bk.energy_breakeven_s(DEFAULT_FLEET) < DEFAULT_FLEET.T_s
+
+
+@given(w=st.floats(0.0, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_in_graph_coeffs_match_host(w):
+    """The in-graph coefficients are normalized (they only feed an argmin,
+    so scale is irrelevant); compare up to the co_min scale."""
+    fleet = DEFAULT_FLEET
+    fs = FleetScalars.from_fleet(fleet)
+    mix, tb = coeffs_in_graph(fs, fleet.T_s, fleet.fpga.spin_up_s, w)
+    if w >= 1.0:
+        ref = bk.energy_coeffs(fleet)
+    elif w <= 0.0:
+        ref = bk.cost_coeffs(fleet)
+    else:
+        ref = bk.weighted_coeffs(fleet, w)
+    scale = ref.co_min / float(mix.co_min)
+    for a, b in zip(mix, ref):
+        np.testing.assert_allclose(float(a) * scale, b, rtol=1e-4)
+    tb_ref = min(bk.weighted_breakeven_s(fleet, w), fleet.T_s)
+    np.testing.assert_allclose(float(tb), tb_ref, rtol=1e-4)
+
+
+def test_spinup_energy_defaults():
+    # §3.2: CPU 0.75 J, FPGA 500 J
+    np.testing.assert_allclose(DEFAULT_FLEET.cpu.spin_up_energy_j, 0.75)
+    np.testing.assert_allclose(DEFAULT_FLEET.fpga.spin_up_energy_j, 500.0)

@@ -1,0 +1,111 @@
+"""Data pipeline determinism/sharding + Spork serving router + engine."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.traces import synthetic_trace
+from repro.data.pipeline import TokenPipeline
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.router import (SporkRouter, analytic_token_latency,
+                                fleet_for_arch)
+
+
+# ------------------------------------------------------------------ data
+def test_pipeline_deterministic():
+    p1 = TokenPipeline(1000, 32, 8, seed=4)
+    p2 = TokenPipeline(1000, 32, 8, seed=4)
+    for step in (0, 5, 17):
+        np.testing.assert_array_equal(np.asarray(p1.batch_at(step)["tokens"]),
+                                      np.asarray(p2.batch_at(step)["tokens"]))
+
+
+def test_pipeline_shards_disjoint():
+    shards = [TokenPipeline(1000, 16, 8, seed=4, shard_index=i, num_shards=4)
+              for i in range(4)]
+    batches = [np.asarray(s.batch_at(3)["tokens"]) for s in shards]
+    assert all(b.shape == (2, 17) for b in batches)
+    # shards differ (independent substreams)
+    assert not np.array_equal(batches[0], batches[1])
+
+
+@given(step=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_tokens_in_range(step):
+    p = TokenPipeline(777, 16, 4, seed=1)
+    toks = np.asarray(p.batch_at(step)["tokens"])
+    assert toks.min() >= 0 and toks.max() < 777
+
+
+def test_pipeline_prefetch_iterator():
+    p = TokenPipeline(100, 8, 2, seed=0)
+    it = p.iterate(start_step=5)
+    step, batch = next(it)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]),
+                                  np.asarray(p.batch_at(5)["tokens"]))
+
+
+# ---------------------------------------------------------------- router
+def test_analytic_latency_ordering():
+    """Bigger (active) models must be slower per token."""
+    small = analytic_token_latency("qwen3-0.6b")
+    big = analytic_token_latency("qwen3-32b")
+    moe = analytic_token_latency("deepseek-v3-671b")
+    assert small < big
+    # deepseek activates ~37B params: slower than 0.6B, faster than dense 671B
+    assert small < moe < 100 * big
+
+
+def test_fleet_for_arch_scales_request_size():
+    _, size_small = fleet_for_arch("qwen3-0.6b", avg_new_tokens=64,
+                                   dryrun_dir="/nonexistent")
+    _, size_big = fleet_for_arch("qwen3-32b", avg_new_tokens=64,
+                                 dryrun_dir="/nonexistent")
+    assert size_big > size_small > 0
+
+
+def test_router_end_to_end_meets_deadlines():
+    router = SporkRouter("qwen3-0.6b", horizon_s=600,
+                         dryrun_dir="/nonexistent")
+    tr = synthetic_trace(seed=2, bias=0.6, horizon_s=600,
+                         request_size_s=router.size_s,
+                         mean_demand_workers=5.0)
+    for t in tr.arrival_times(seed=3):
+        router.submit(float(t))
+    rep = router.finish()
+    assert rep.deadline_miss_rate == 0.0
+    assert 0.1 < rep.energy_efficiency <= 1.0
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_decodes_batched_requests():
+    cfg = get_config("granite-3-2b", "smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=3, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        ok = eng.add_request(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+            max_new_tokens=6))
+        assert ok
+    tokens = []
+    while eng.n_active:
+        tokens += eng.step()
+    assert len(tokens) == 18
+    rids = {r for r, _ in tokens}
+    assert rids == {0, 1, 2}
+
+
+def test_engine_rejects_when_full():
+    cfg = get_config("granite-3-2b", "smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=1, max_len=32)
+    p = np.zeros((2,), np.int32)
+    assert eng.add_request(Request(rid=0, prompt=p, max_new_tokens=4))
+    assert not eng.add_request(Request(rid=1, prompt=p, max_new_tokens=4))

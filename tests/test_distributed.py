@@ -1,0 +1,196 @@
+"""Distribution substrate: sharding rules, pipeline parallelism,
+hierarchical collectives, and a multi-device SPMD train step — all on
+fabricated host devices (subprocess with
+--xla_force_host_platform_device_count, mirroring the dry-run)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+@pytest.fixture()
+def mesh16():
+    m = AbstractMesh((16, 16), ("data", "model"))
+    shd.set_mesh(m)
+    yield m
+    shd.clear_mesh()
+
+
+def test_param_pspec_tp_only_default(mesh16):
+    """Default layout (§Perf iteration 1): TP-only weights, no fan-in
+    data sharding."""
+    spec = shd.param_pspec("layers/attn/wq", (28, 1024, 2048))
+    assert spec == P(None, None, "model")
+
+
+def test_param_pspec_fsdp_mode(mesh16):
+    """FSDP storage (76B+ training configs): fan-in over data."""
+    spec = shd.param_pspec("layers/attn/wq", (28, 1024, 2048), fsdp=True)
+    assert spec == P(None, "data", "model")
+
+
+def test_param_pspec_expert_parallel(mesh16):
+    spec = shd.param_pspec("moe_layers/moe/experts/w_gate",
+                           (58, 256, 7168, 2048))
+    assert spec[1] == "model"          # experts over model (EP)
+    assert spec[2] is None             # TP/EP-only by default
+    spec_fsdp = shd.param_pspec("moe_layers/moe/experts/w_gate",
+                                (58, 256, 7168, 2048), fsdp=True)
+    assert spec_fsdp[2] == "data"
+
+
+def test_param_pspec_zero_optimizer_layout(mesh16):
+    """ZeRO: optimizer moments additionally shard over data."""
+    spec = shd.param_pspec("layers/attn/wq", (28, 1024, 2048), zero=True)
+    assert "data" in spec and spec[-1] == "model"
+
+
+def test_param_pspec_divisibility_fallback(mesh16):
+    # whisper: 8-head projection (512 x 512): 512 divides 16, fine; but a
+    # 50-wide dim must fall back to replication
+    spec = shd.param_pspec("x/w", (4, 50, 4096))
+    assert spec == P(None, None, "model")
+
+
+def test_param_pspec_embed(mesh16):
+    assert shd.param_pspec("embed", (152064, 1024)) == P("model", None)
+    assert shd.param_pspec("embed", (152064, 1024),
+                           fsdp=True) == P("model", "data")
+
+
+def test_batch_pspec_seq_fallback(mesh16):
+    # batch 1 (long_500k): shard the sequence axis instead
+    assert shd.batch_pspec((1, 524288)) == P(None, "data")
+    assert shd.batch_pspec((256, 4096)) == P("data", None)
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+    shd.clear_mesh()
+    x = jnp.ones((4, 4))
+    assert shd.constrain(x, ("data", None)) is x
+
+
+_MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    %s
+""")
+
+
+def _run_multidev(body: str) -> str:
+    script = _MULTIDEV % textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pipeline_forward_matches_sequential():
+    body = """
+    from functools import partial
+    from repro.distributed.pipeline import pipeline_forward
+    mesh = jax.make_mesh((4, 2), ("pod", "data"))
+    S, M, B, D = 4, 6, 2, 8
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (S, D, D)) * 0.3
+    micro = jax.random.normal(jax.random.PRNGKey(1), (M, B, D))
+    stage = lambda p, x: jnp.tanh(x @ p["w"])
+    got = pipeline_forward(mesh, stage, {"w": w}, micro, axis="pod")
+    want = micro
+    for s in range(S):
+        want = jnp.tanh(want @ w[s])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    print("PIPELINE_OK")
+    """
+    assert "PIPELINE_OK" in _run_multidev(body)
+
+
+def test_hierarchical_psum_equals_flat():
+    body = """
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+    from repro.distributed.collectives import hierarchical_psum
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
+
+    @partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")),
+             out_specs=P(("pod", "data")), check_rep=False)
+    def hier(v):
+        return hierarchical_psum(v, "data", "pod")
+
+    @partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")),
+             out_specs=P(("pod", "data")), check_rep=False)
+    def flat(v):
+        return jax.lax.psum(v, ("pod", "data"))
+
+    np.testing.assert_allclose(np.asarray(hier(x)), np.asarray(flat(x)),
+                               rtol=1e-6)
+    print("PSUM_OK")
+    """
+    assert "PSUM_OK" in _run_multidev(body)
+
+
+def test_spmd_train_step_runs_on_8_devices():
+    """End-to-end: sharded params + batch, one real train step on a
+    fabricated (4, 2) mesh — the miniature of the production config."""
+    body = """
+    from repro.configs import get_config
+    from repro.distributed import sharding as shd
+    from repro.models import build_model
+    from repro.train.loop import init_train_state, make_train_step
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    shd.set_mesh(mesh)
+    cfg = get_config("granite-3-2b", "smoke")
+    model = build_model(cfg)
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        shards = shd.param_shardings(state.params, mesh)
+        params = jax.device_put(state.params, shards)
+        state = state._replace(params=params)
+        step = jax.jit(make_train_step(model, total_steps=5))
+        batch = {"tokens": jnp.zeros((8, 33), jnp.int32)}
+        batch = jax.device_put(
+            batch, {"tokens": jax.NamedSharding(mesh, P("data", None))})
+        state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+    print("SPMD_OK")
+    """
+    assert "SPMD_OK" in _run_multidev(body)
+
+
+def test_dryrun_records_exist_and_pass():
+    """The committed dry-run results must show every cell compiling on
+    both production meshes (the actual compile runs are the dry-run CLI;
+    this guards the recorded evidence)."""
+    d = "results/dryrun"
+    if not os.path.isdir(d):
+        pytest.skip("dry-run results not collected yet")
+    from repro.configs.registry import cells
+    missing, failed = [], []
+    for arch, shape, _ in cells():
+        for mesh in ("single", "multi"):
+            p = os.path.join(d, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(p):
+                missing.append((arch, shape, mesh))
+                continue
+            if not json.load(open(p)).get("ok"):
+                failed.append((arch, shape, mesh))
+    assert not failed, failed
+    assert not missing, missing

@@ -1,0 +1,74 @@
+"""Exactness tests: HiGHS MILP (Table 3) vs the JAX min-plus DP."""
+
+import numpy as np
+import pytest
+
+from repro.core.dp import evaluate_path, solve_dp
+from repro.core.milp import solve_milp
+from repro.core.workers import DEFAULT_FLEET
+
+
+FLEET = DEFAULT_FLEET.replace(max_cpus=10_000, max_fpgas=64)
+
+
+def _work(seed, T, scale):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, scale * FLEET.T_s, size=T)
+
+
+@pytest.mark.parametrize("ew", [1.0, 0.0, 0.5, 0.9])
+def test_dp_matches_milp_hybrid(ew):
+    W = _work(0, 16, 30)
+    m = solve_milp(W, FLEET, energy_weight=ew, time_limit_s=60)
+    d = solve_dp(W, FLEET, energy_weight=ew)
+    np.testing.assert_allclose(d.objective, m.objective, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kw", [dict(allow_fpga=False), dict(allow_cpu=False)])
+def test_dp_matches_milp_homogeneous(kw):
+    W = _work(1, 16, 20)
+    m = solve_milp(W, FLEET, energy_weight=1.0, **kw)
+    d = solve_dp(W, FLEET, energy_weight=1.0, **kw)
+    np.testing.assert_allclose(d.objective, m.objective, rtol=1e-5)
+
+
+def test_dp_objective_equals_path_evaluation():
+    """The DP's optimal value must equal exact accounting of its own path."""
+    W = _work(2, 24, 25)
+    d = solve_dp(W, FLEET, energy_weight=1.0)
+    ev = evaluate_path(W, d.y_fpga, FLEET)
+    np.testing.assert_allclose(ev.energy_j, d.objective, rtol=1e-5)
+
+
+def test_hybrid_dominates_homogeneous():
+    """§3: the hybrid optimum can never be worse than either homogeneous
+    optimum (it contains them as feasible points)."""
+    W = _work(3, 24, 25)
+    for ew in (1.0, 0.0):
+        hy = solve_dp(W, FLEET, energy_weight=ew)
+        cpu = solve_dp(W, FLEET, energy_weight=ew, allow_fpga=False)
+        fpga = solve_dp(W, FLEET, energy_weight=ew, allow_cpu=False)
+        assert hy.objective <= cpu.objective + 1e-6
+        assert hy.objective <= fpga.objective + 1e-6
+
+
+def test_min_duration_constraint_binds():
+    """With fine intervals (T_s < A_f) the Table-3 window constraint forces
+    allocations to persist; the MILP objective can only go up vs S_int=1."""
+    fleet_fine = FLEET.replace(interval_s=5.0)   # spin-up 10s -> S_int=2
+    W = _work(4, 16, 10)
+    con = solve_milp(W, fleet_fine, energy_weight=1.0, time_limit_s=60)
+    y = con.y_fpga
+    u = np.maximum(np.diff(np.concatenate([[0], y])), 0)
+    for t in range(len(y)):
+        lo = max(0, t - 1)
+        assert y[t] + 1e-6 >= u[lo:t + 1].sum()
+
+
+def test_pareto_tradeoff_direction():
+    """Energy-optimal uses <= energy and >= cost than cost-optimal (Fig. 3)."""
+    W = _work(5, 32, 30)
+    e = solve_dp(W, FLEET, energy_weight=1.0)
+    c = solve_dp(W, FLEET, energy_weight=0.0)
+    assert e.energy_j <= c.energy_j + 1e-6
+    assert e.cost_usd >= c.cost_usd - 1e-9

@@ -1,0 +1,124 @@
+"""Rate simulator semantics + cross-engine parity with the exact DES."""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import report
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim import ratesim
+from repro.sim.events import simulate_events
+
+
+FLEET = DEFAULT_FLEET
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthetic_trace(seed=3, bias=0.65, horizon_s=600,
+                           request_size_s=0.05, mean_demand_workers=10.0)
+
+
+def test_cpu_dynamic_anchor(trace):
+    """Paper Table 8 anchor: CPU-only efficiency ~= (B_f/S)/B_c = 16.7%,
+    relative cost ~= S*C_c/C_f = 1.36."""
+    tot = ratesim.simulate("cpu_dynamic", trace.counts, trace.request_size_s,
+                           FLEET)
+    r = report(tot, FLEET)
+    assert abs(r.energy_efficiency - (50.0 / 2) / 150.0) < 0.01
+    # the 1s idle linger adds relatively more cost on small fleets
+    assert abs(r.relative_cost - 2 * 0.668 / 0.982) < 0.15
+
+
+def test_work_conservation(trace):
+    for pol in ("spork", "cpu_dynamic", "mark_ideal", "fpga_static"):
+        tot = ratesim.simulate(pol, trace.counts, trace.request_size_s, FLEET)
+        served = tot.work_on_fpga_cpu_s + tot.work_on_cpu_cpu_s
+        np.testing.assert_allclose(served, tot.work_cpu_s, rtol=1e-3)
+
+
+def test_hybrid_meets_deadlines(trace):
+    for pol in ("spork", "spork_ideal", "cpu_dynamic", "mark_ideal"):
+        tot = ratesim.simulate(pol, trace.counts, trace.request_size_s, FLEET)
+        assert tot.deadline_misses == 0
+
+
+def test_energy_components_sum(trace):
+    tot = ratesim.simulate("spork", trace.counts, trace.request_size_s, FLEET)
+    parts = (tot.fpga_busy_j + tot.fpga_idle_j + tot.cpu_busy_j + tot.spinup_j)
+    assert parts <= tot.energy_j + 1e-3           # + cpu idle
+    assert tot.energy_j < parts * 1.2
+
+
+def test_spork_beats_homogeneous_on_energy():
+    """Needs a long enough trace for the cold-started predictor to learn
+    (the paper uses 2h traces; §5.1 notes predictors improve over time)."""
+    tr = synthetic_trace(seed=3, bias=0.65, horizon_s=2400,
+                         request_size_s=0.05, mean_demand_workers=10.0)
+    spork = report(ratesim.simulate("spork", tr.counts,
+                                    tr.request_size_s, FLEET), FLEET)
+    stat = report(ratesim.simulate("fpga_static", tr.counts,
+                                   tr.request_size_s, FLEET), FLEET)
+    cpu = report(ratesim.simulate("cpu_dynamic", tr.counts,
+                                  tr.request_size_s, FLEET), FLEET)
+    assert spork.energy_efficiency > stat.energy_efficiency
+    assert spork.energy_efficiency > cpu.energy_efficiency
+    assert spork.relative_cost < stat.relative_cost
+
+
+def test_spork_cost_variant_cheaper(trace):
+    e = report(ratesim.simulate("spork", trace.counts, trace.request_size_s,
+                                FLEET, energy_weight=1.0), FLEET)
+    c = report(ratesim.simulate("spork", trace.counts, trace.request_size_s,
+                                FLEET, energy_weight=0.0), FLEET)
+    assert c.relative_cost <= e.relative_cost + 0.02
+    assert e.energy_efficiency >= c.energy_efficiency - 0.02
+
+
+def test_ideal_at_least_as_good(trace):
+    real = report(ratesim.simulate("spork", trace.counts,
+                                   trace.request_size_s, FLEET), FLEET)
+    ideal = report(ratesim.simulate("spork_ideal", trace.counts,
+                                    trace.request_size_s, FLEET), FLEET)
+    assert ideal.energy_efficiency >= real.energy_efficiency - 0.03
+
+
+def test_fpga_dynamic_tuning_meets_deadlines(trace):
+    h, tot = ratesim.tune_fpga_dynamic(trace.counts, trace.request_size_s,
+                                       FLEET)
+    assert tot.deadline_misses == 0
+    assert h >= 0
+
+
+def test_event_sim_parity_with_ratesim(trace):
+    """The two engines implement the same semantics at different
+    granularity; energy/cost must agree within a few percent."""
+    arr = trace.arrival_times(seed=5)
+    ev = report(simulate_events(arr, trace.request_size_s, FLEET,
+                                dispatcher="spork", horizon_s=600), FLEET)
+    ra = report(ratesim.simulate("spork", trace.counts[:600],
+                                 trace.request_size_s, FLEET), FLEET)
+    assert abs(ev.energy_efficiency - ra.energy_efficiency) < 0.06
+    assert abs(ev.relative_cost - ra.relative_cost) < 0.15
+    assert abs(ev.cpu_request_fraction - ra.cpu_request_fraction) < 0.05
+
+
+def test_dispatch_policy_ordering(trace):
+    """Paper Table 9: Spork dispatch >= index packing >= round robin."""
+    arr = trace.arrival_times(seed=5)
+    effs = {}
+    for disp in ("spork", "index_packing", "round_robin"):
+        tot = simulate_events(arr, trace.request_size_s, FLEET,
+                              dispatcher=disp, horizon_s=600)
+        effs[disp] = report(tot, FLEET).energy_efficiency
+        assert tot.deadline_misses == 0
+    assert effs["spork"] >= effs["index_packing"] - 0.02
+    assert effs["index_packing"] > effs["round_robin"]
+
+
+def test_event_sim_deadline_never_violated_hybrid(trace):
+    arr = trace.arrival_times(seed=9)
+    tot = simulate_events(arr, trace.request_size_s, FLEET,
+                          dispatcher="spork", horizon_s=600)
+    assert tot.deadline_misses == 0
+    assert tot.requests == len(arr)

@@ -1,0 +1,38 @@
+"""Debug: dump XLA buffer assignment for one dry-run cell to find the
+largest live buffers.
+
+Usage: python tools/debug_buffers.py <arch> <shape> <mesh> [L]
+"""
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_dump_to=/tmp/xdump")
+
+import glob
+import re
+import shutil
+
+shutil.rmtree("/tmp/xdump", ignore_errors=True)
+arch, shape, mesh = sys.argv[1], sys.argv[2], sys.argv[3]
+layers = int(sys.argv[4]) if len(sys.argv) > 4 else None
+rec = dryrun.run_cell(arch, shape, mesh, n_layers_override=layers)
+print("temp GiB:", rec["temp_size_in_bytes"] / 2**30)
+
+found = False
+for f in sorted(glob.glob("/tmp/xdump/*buffer-assignment*")):
+    txt = open(f).read()
+    allocs = re.findall(r"allocation \d+: size (\d+)(.*)", txt)
+    sizes = sorted(((int(sz), info.strip()[:200]) for sz, info in allocs),
+                   reverse=True)[:15]
+    print(f"== {f}")
+    for sz, info in sizes:
+        print(f"  {sz / 2**30:8.3f} GiB  {info}")
+    found = True
+    break
+if not found:
+    print("files:", [os.path.basename(x) for x in glob.glob("/tmp/xdump/*")][:20])
