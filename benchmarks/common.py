@@ -1,11 +1,36 @@
-"""Shared benchmark helpers: fast-mode defaults, timing, CSV emission."""
+"""Shared benchmark helpers: fast-mode defaults, timing, CSV + JSON emission.
+
+Also enables JAX's persistent compilation cache (results/.jax_cache) so
+repeated benchmark runs — and the separate suites of one run — skip
+recompiling the sweep-engine programs.
+"""
 
 from __future__ import annotations
 
+import json
 import os
 import time
 
 FAST = os.environ.get("BENCH_FAST", "1") != "0"
+
+_RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            os.pardir, "results")
+SWEEP_JSON = os.environ.get(
+    "BENCH_SWEEP_JSON", os.path.join(_RESULTS_DIR, "BENCH_sweep.json"))
+
+
+def _enable_compilation_cache() -> None:
+    try:
+        import jax
+        cache_dir = os.path.join(_RESULTS_DIR, ".jax_cache")
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:       # pragma: no cover — cache is a pure optimization
+        pass
+
+
+_enable_compilation_cache()
 
 
 def fast_params():
@@ -14,14 +39,37 @@ def fast_params():
 
 
 def emit(name: str, rows: list[dict], t0: float) -> None:
-    """Scaffold contract: ``name,us_per_call,derived`` CSV lines."""
-    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    """Scaffold contract: ``name,us_per_call,derived`` CSV lines, plus a
+    machine-readable suite -> {wall seconds, rows} entry in
+    results/BENCH_sweep.json so the perf trajectory is tracked across PRs."""
+    wall_s = time.time() - t0
+    us = wall_s * 1e6 / max(len(rows), 1)
     for row in rows:
         derived = ";".join(f"{k}={v}" for k, v in row.items())
         print(f"{name},{us:.0f},{derived}")
+    record_sweep(name, wall_s, len(rows))
+
+
+def record_sweep(name: str, wall_s: float, n_rows: int) -> None:
+    """Merge one suite's timing into BENCH_sweep.json (best effort)."""
+    try:
+        with open(SWEEP_JSON) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        data = {}
+    data[name] = {"wall_s": round(wall_s, 3), "rows": n_rows,
+                  "fast": FAST}
+    try:
+        os.makedirs(os.path.dirname(SWEEP_JSON), exist_ok=True)
+        with open(SWEEP_JSON, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+    except OSError:         # pragma: no cover — read-only results dir
+        pass
 
 
 def timed(fn):
+    """Run ``fn`` and return (result, start time) for `emit`."""
     t0 = time.time()
     out = fn()
     return out, t0

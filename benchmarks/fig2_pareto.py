@@ -4,6 +4,12 @@ Energy-/cost-optimal allocations for CPU-only, FPGA-only, and hybrid
 platforms across workload burstiness, via the min-plus DP (exact MILP
 equivalent at T_s = A_f; tests/test_milp.py), normalized to the idealized
 FPGA-only platform. --pareto adds the Fig. 3 weighted-objective front.
+
+The (bias, seed, platform, objective) grid is solved with
+`core.dp.solve_dp_batch`: work traces are generated up front and each
+platform group (static `allow_cpu`/`allow_fpga` axes) runs every
+(trace, weight) cell in one vmapped min-plus dispatch — including the
+ten pareto weights — instead of one `solve_dp` call per cell.
 """
 
 from __future__ import annotations
@@ -11,11 +17,15 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.bmodel import bmodel_rates_np
-from repro.core.dp import pareto_front, solve_dp
+from repro.core.dp import PARETO_WEIGHTS, solve_dp_batch
 from repro.core.metrics import report
 from repro.core.workers import DEFAULT_FLEET
 
 from benchmarks.common import fast_params
+
+PLATFORMS = (("hybrid", dict()),
+             ("cpu_only", dict(allow_fpga=False)),
+             ("fpga_only", dict(allow_cpu=False)))
 
 
 def interval_work(seed: int, bias: float, horizon_s: int,
@@ -33,34 +43,53 @@ def interval_work(seed: int, bias: float, horizon_s: int,
 def run(pareto: bool = False) -> list[dict]:
     n_traces, horizon, _ = fast_params()
     fleet = DEFAULT_FLEET.replace(max_fpgas=2048, max_cpus=10 ** 6)
-    rows = []
-    for bias in (0.5, 0.55, 0.6, 0.65, 0.7, 0.75):
-        acc: dict[str, list] = {}
+    biases = (0.5, 0.55, 0.6, 0.65, 0.7, 0.75)
+
+    # Work-trace batch up front; one array per (bias, seed).
+    work = {(bias, seed): interval_work(seed, bias, horizon)
+            for bias in biases for seed in range(n_traces)}
+
+    # Assemble every DP cell, grouped by the static platform axes.
+    cells: dict[str, list] = {name: [] for name, _ in PLATFORMS}
+    for bias in biases:
         for seed in range(n_traces):
-            W = interval_work(seed, bias, horizon)
-            for platform, kw in (("hybrid", {}),
-                                 ("cpu_only", dict(allow_fpga=False)),
-                                 ("fpga_only", dict(allow_cpu=False))):
+            for platform, _ in PLATFORMS:
                 for oname, ew in (("energy", 1.0), ("cost", 0.0)):
-                    sol = solve_dp(W, fleet, energy_weight=ew, **kw)
-                    r = report(sol.totals, fleet)
-                    acc.setdefault((platform, oname), []).append(
-                        (r.energy_efficiency, r.relative_cost))
-        for (platform, oname), vals in acc.items():
-            e = float(np.mean([v[0] for v in vals]))
-            c = float(np.mean([v[1] for v in vals]))
-            rows.append({"bias": bias, "platform": platform,
-                         "objective": oname, "energy_eff": round(e, 4),
-                         "rel_cost": round(c, 4)})
+                    cells[platform].append(
+                        ((bias, platform, oname), work[(bias, seed)], ew))
         if pareto:
-            W = interval_work(0, bias, horizon)
-            for sol, w in zip(pareto_front(W, fleet),
-                              [0.0] + list(np.geomspace(0.02, 1.0, 9))):
-                r = report(sol.totals, fleet)
+            for w in PARETO_WEIGHTS:
+                cells["hybrid"].append(
+                    ((bias, "hybrid-pareto", f"w={w:.3f}"),
+                     work[(bias, 0)], float(w)))
+
+    # One batched dispatch per platform group.
+    results: dict[tuple, list] = {}
+    for platform, kw in PLATFORMS:
+        group = cells[platform]
+        sols = solve_dp_batch(np.stack([w for _, w, _ in group]), fleet,
+                              [ew for _, _, ew in group], **kw)
+        for (tag, _, _), sol in zip(group, sols):
+            r = report(sol.totals, fleet)
+            results.setdefault(tag, []).append(
+                (r.energy_efficiency, r.relative_cost))
+
+    rows = []
+    for bias in biases:
+        for platform, _ in PLATFORMS:
+            for oname in ("energy", "cost"):
+                vals = results[(bias, platform, oname)]
+                rows.append({"bias": bias, "platform": platform,
+                             "objective": oname,
+                             "energy_eff": round(float(np.mean([v[0] for v in vals])), 4),
+                             "rel_cost": round(float(np.mean([v[1] for v in vals])), 4)})
+        if pareto:
+            for w in PARETO_WEIGHTS:
+                (e, c), = results[(bias, "hybrid-pareto", f"w={w:.3f}")]
                 rows.append({"bias": bias, "platform": "hybrid-pareto",
                              "objective": f"w={w:.3f}",
-                             "energy_eff": round(r.energy_efficiency, 4),
-                             "rel_cost": round(r.relative_cost, 4)})
+                             "energy_eff": round(e, 4),
+                             "rel_cost": round(c, 4)})
     return rows
 
 

@@ -2,47 +2,66 @@
 
 Reports energy efficiency / cost plus the diagnostic panels: fraction of
 requests on CPUs and FPGA spin-ups (normalized to each scheduler's max).
+
+Runs on the batched sweep engine: SporkE and SporkC differ only in the
+traced energy weight, so the whole (bias, scheduler, seed) grid dispatches
+as one batch per policy.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.metrics import report
 from repro.core.traces import synthetic_trace
 from repro.core.workers import DEFAULT_FLEET
-from repro.sim import ratesim
+from repro.sim.sweep import SweepCell, sweep
 
 from benchmarks.common import fast_params
+
+SCHEDULERS = [("SporkE", "spork", 1.0), ("SporkC", "spork", 0.0),
+              ("SporkE-ideal", "spork_ideal", 1.0),
+              ("MArk-ideal", "mark_ideal", 1.0)]
 
 
 def run() -> list[dict]:
     n_traces, horizon, _ = fast_params()
     fleet = DEFAULT_FLEET.replace(
         fpga=DEFAULT_FLEET.fpga.replace(spin_up_s=60.0))
-    schedulers = [("SporkE", "spork", 1.0), ("SporkC", "spork", 0.0),
-                  ("SporkE-ideal", "spork_ideal", 1.0),
-                  ("MArk-ideal", "mark_ideal", 1.0)]
+    biases = (0.5, 0.6, 0.7, 0.75)
+
+    traces = {(bias, seed): synthetic_trace(seed=seed, bias=bias,
+                                            horizon_s=horizon,
+                                            request_size_s=0.05,
+                                            mean_demand_workers=100.0)
+              for bias in biases for seed in range(n_traces)}
+
+    cells, order = [], []
+    for bias in biases:
+        for label, policy, ew in SCHEDULERS:
+            order.append((bias, label))
+            cells.extend(
+                SweepCell(policy, traces[(bias, seed)].counts,
+                          traces[(bias, seed)].request_size_s, fleet,
+                          energy_weight=ew, tag=(bias, label))
+                for seed in range(n_traces))
+
+    res = sweep(cells)
+    acc: dict[tuple, list] = {}
+    for i, cell in enumerate(res.cells):
+        tot = res.totals(i)
+        r = res.report(i)
+        acc.setdefault(cell.tag, []).append(
+            (r.energy_efficiency, r.relative_cost, r.cpu_request_fraction,
+             tot.fpga_spinups))
+
     rows = []
-    for bias in (0.5, 0.6, 0.7, 0.75):
-        for label, policy, ew in schedulers:
-            effs, costs, fracs, spins = [], [], [], []
-            for seed in range(n_traces):
-                tr = synthetic_trace(seed=seed, bias=bias, horizon_s=horizon,
-                                     request_size_s=0.05,
-                                     mean_demand_workers=100.0)
-                tot = ratesim.simulate(policy, tr.counts, tr.request_size_s,
-                                       fleet, energy_weight=ew)
-                r = report(tot, fleet)
-                effs.append(r.energy_efficiency)
-                costs.append(r.relative_cost)
-                fracs.append(r.cpu_request_fraction)
-                spins.append(tot.fpga_spinups)
-            rows.append({"bias": bias, "scheduler": label,
-                         "energy_eff": round(float(np.mean(effs)), 4),
-                         "rel_cost": round(float(np.mean(costs)), 4),
-                         "cpu_frac": round(float(np.mean(fracs)), 4),
-                         "fpga_spinups": int(np.mean(spins))})
+    for bias, label in order:
+        vals = acc[(bias, label)]
+        rows.append({"bias": bias, "scheduler": label,
+                     "energy_eff": round(float(np.mean([v[0] for v in vals])), 4),
+                     "rel_cost": round(float(np.mean([v[1] for v in vals])), 4),
+                     "cpu_frac": round(float(np.mean([v[2] for v in vals])), 4),
+                     "fpga_spinups": int(np.mean([v[3] for v in vals]))})
     return rows
 
 

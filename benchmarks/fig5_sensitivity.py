@@ -1,4 +1,10 @@
-"""Fig. 5: sensitivity to workload burstiness x FPGA spin-up time."""
+"""Fig. 5: sensitivity to workload burstiness x FPGA spin-up time.
+
+Runs on the batched sweep engine: all (bias, seed, policy) cells for one
+spin-up latency share a compiled program and go through a handful of
+vmapped dispatches instead of one `simulate` call per cell (spin-up is a
+static axis — it sets scan lengths — so each value compiles once).
+"""
 
 from __future__ import annotations
 
@@ -7,9 +13,12 @@ import numpy as np
 from repro.core.metrics import report
 from repro.core.traces import synthetic_trace
 from repro.core.workers import DEFAULT_FLEET
-from repro.sim import ratesim
+from repro.sim.sweep import SweepCell, sweep, tune_fpga_dynamic_cells
 
 from benchmarks.common import FAST, fast_params
+
+POLICIES = (("SporkE", "spork"), ("CPU-dynamic", "cpu_dynamic"),
+            ("FPGA-static", "fpga_static"), ("FPGA-dynamic", "fpga_dynamic"))
 
 
 def run() -> list[dict]:
@@ -17,34 +26,45 @@ def run() -> list[dict]:
     spin_ups = (10.0, 60.0) if FAST else (1.0, 10.0, 60.0, 100.0)
     biases = (0.55, 0.65, 0.75) if FAST else (0.5, 0.55, 0.6, 0.65, 0.7, 0.75)
     ref = DEFAULT_FLEET
-    rows = []
+
+    # Trace batch up front: traces depend only on (bias, seed).
+    traces = {(bias, seed): synthetic_trace(seed=seed, bias=bias,
+                                            horizon_s=horizon,
+                                            request_size_s=0.05,
+                                            mean_demand_workers=100.0)
+              for bias in biases for seed in range(n_traces)}
+
+    plain, tuned = [], []
+    order = []
     for spin in spin_ups:
         fleet = ref.replace(fpga=ref.fpga.replace(spin_up_s=spin))
         for bias in biases:
-            for label, policy in (("SporkE", "spork"),
-                                  ("CPU-dynamic", "cpu_dynamic"),
-                                  ("FPGA-static", "fpga_static"),
-                                  ("FPGA-dynamic", "fpga_dynamic")):
-                effs, costs = [], []
+            for label, policy in POLICIES:
+                order.append((spin, bias, label))
                 for seed in range(n_traces):
-                    tr = synthetic_trace(seed=seed, bias=bias,
-                                         horizon_s=horizon,
-                                         request_size_s=0.05,
-                                         mean_demand_workers=100.0)
-                    if policy == "fpga_dynamic":
-                        _, tot = ratesim.tune_fpga_dynamic(
-                            tr.counts, tr.request_size_s, fleet)
-                    else:
-                        tot = ratesim.simulate(policy, tr.counts,
-                                               tr.request_size_s, fleet)
-                    # normalize against DEFAULT parameters (paper Fig. 5)
-                    r = report(tot, fleet, reference_fleet=ref)
-                    effs.append(r.energy_efficiency)
-                    costs.append(r.relative_cost)
-                rows.append({"spin_up_s": spin, "bias": bias,
-                             "scheduler": label,
-                             "energy_eff": round(float(np.mean(effs)), 4),
-                             "rel_cost": round(float(np.mean(costs)), 4)})
+                    tr = traces[(bias, seed)]
+                    cell = SweepCell(policy, tr.counts, tr.request_size_s,
+                                     fleet, tag=(spin, bias, label))
+                    (tuned if policy == "fpga_dynamic" else plain).append(cell)
+
+    res = sweep(plain)
+    acc: dict[tuple, list] = {}
+    for i, cell in enumerate(res.cells):
+        # normalize against DEFAULT parameters (paper Fig. 5)
+        r = res.report(i, reference_fleet=ref)
+        acc.setdefault(cell.tag, []).append((r.energy_efficiency,
+                                             r.relative_cost))
+    for (_, tot), cell in zip(tune_fpga_dynamic_cells(tuned), tuned):
+        r = report(tot, cell.fleet, reference_fleet=ref)
+        acc.setdefault(cell.tag, []).append((r.energy_efficiency,
+                                             r.relative_cost))
+
+    rows = []
+    for spin, bias, label in order:
+        vals = acc[(spin, bias, label)]
+        rows.append({"spin_up_s": spin, "bias": bias, "scheduler": label,
+                     "energy_eff": round(float(np.mean([v[0] for v in vals])), 4),
+                     "rel_cost": round(float(np.mean([v[1] for v in vals])), 4)})
     return rows
 
 

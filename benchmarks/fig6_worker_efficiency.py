@@ -1,4 +1,9 @@
-"""Fig. 6: sensitivity to FPGA speedup and busy power draw."""
+"""Fig. 6: sensitivity to FPGA speedup and busy power draw.
+
+Speedup and busy power are *traced* worker scalars, so the whole knob
+grid shares compiled programs with the other suites: one sweep over all
+(knob, value, policy, seed) cells plus one batched headroom tuning pass.
+"""
 
 from __future__ import annotations
 
@@ -7,43 +12,56 @@ import numpy as np
 from repro.core.metrics import report
 from repro.core.traces import synthetic_trace
 from repro.core.workers import DEFAULT_FLEET
-from repro.sim import ratesim
+from repro.sim.sweep import SweepCell, sweep, tune_fpga_dynamic_cells
 
 from benchmarks.common import fast_params
+
+POLICIES = (("SporkE", "spork"), ("FPGA-static", "fpga_static"),
+            ("FPGA-dynamic", "fpga_dynamic"), ("CPU-dynamic", "cpu_dynamic"))
 
 
 def run() -> list[dict]:
     n_traces, horizon, _ = fast_params()
     ref = DEFAULT_FLEET
-    rows = []
+    traces = [synthetic_trace(seed=seed, bias=0.6, horizon_s=horizon,
+                              request_size_s=0.05, mean_demand_workers=100.0)
+              for seed in range(n_traces)]
+
     grid = [("speedup", s, ref.replace(fpga=ref.fpga.replace(speedup=s)))
             for s in (1.0, 2.0, 4.0)]
     grid += [("busy_w", w, ref.replace(fpga=ref.fpga.replace(busy_w=w)))
              for w in (25.0, 50.0, 100.0)]
+
+    plain, tuned, order = [], [], []
     for knob, val, fleet in grid:
-        for label, policy in (("SporkE", "spork"),
-                              ("FPGA-static", "fpga_static"),
-                              ("FPGA-dynamic", "fpga_dynamic"),
-                              ("CPU-dynamic", "cpu_dynamic")):
-            effs, costs, idle = [], [], []
-            for seed in range(n_traces):
-                tr = synthetic_trace(seed=seed, bias=0.6, horizon_s=horizon,
-                                     request_size_s=0.05,
-                                     mean_demand_workers=100.0)
-                if policy == "fpga_dynamic":
-                    _, tot = ratesim.tune_fpga_dynamic(
-                        tr.counts, tr.request_size_s, fleet)
-                else:
-                    tot = ratesim.simulate(policy, tr.counts,
-                                           tr.request_size_s, fleet)
-                r = report(tot, fleet, reference_fleet=ref)
-                effs.append(r.energy_efficiency)
-                costs.append(r.relative_cost)
-                idle.append(tot.fpga_idle_j / max(tot.energy_j, 1e-9))
-            rows.append({knob: val, "scheduler": label,
-                         "energy_eff": round(float(np.mean(effs)), 4),
-                         "rel_cost": round(float(np.mean(costs)), 4),
-                         "idle_energy_frac": round(float(np.mean(idle)), 4)})
+        for label, policy in POLICIES:
+            order.append((knob, val, label))
+            for tr in traces:
+                cell = SweepCell(policy, tr.counts, tr.request_size_s, fleet,
+                                 tag=(knob, val, label))
+                (tuned if policy == "fpga_dynamic" else plain).append(cell)
+
+    acc: dict[tuple, list] = {}
+
+    def add(tag, tot, fleet):
+        r = report(tot, fleet, reference_fleet=ref)
+        idle = tot.fpga_idle_j / max(tot.energy_j, 1e-9)
+        acc.setdefault(tag, []).append((r.energy_efficiency, r.relative_cost,
+                                        idle))
+
+    res = sweep(plain)
+    for i, cell in enumerate(res.cells):
+        add(cell.tag, res.totals(i), cell.fleet)
+    for (_, tot), cell in zip(tune_fpga_dynamic_cells(tuned), tuned):
+        add(cell.tag, tot, cell.fleet)
+
+    rows = []
+    for knob, val, label in order:
+        vals = acc[(knob, val, label)]
+        rows.append({knob: val, "scheduler": label,
+                     "energy_eff": round(float(np.mean([v[0] for v in vals])), 4),
+                     "rel_cost": round(float(np.mean([v[1] for v in vals])), 4),
+                     "idle_energy_frac": round(float(np.mean([v[2] for v in vals])), 4)})
     return rows
 
 

@@ -1,4 +1,8 @@
-"""Fig. 7: sensitivity to request sizes (deadlines = 10x size)."""
+"""Fig. 7: sensitivity to request sizes (deadlines = 10x size).
+
+Request size is a traced scalar, so every bucket rides the same compiled
+programs: one sweep + one batched tuning pass for the whole figure.
+"""
 
 from __future__ import annotations
 
@@ -7,38 +11,54 @@ import numpy as np
 from repro.core.metrics import report
 from repro.core.traces import BUCKETS_S, synthetic_trace
 from repro.core.workers import DEFAULT_FLEET
-from repro.sim import ratesim
+from repro.sim.sweep import SweepCell, sweep, tune_fpga_dynamic_cells
 
 from benchmarks.common import fast_params
+
+POLICIES = (("SporkE", "spork"), ("FPGA-static", "fpga_static"),
+            ("FPGA-dynamic", "fpga_dynamic"))
 
 
 def run() -> list[dict]:
     n_traces, horizon, _ = fast_params()
     fleet = DEFAULT_FLEET
-    rows = []
-    for bucket, (lo, hi) in BUCKETS_S.items():
-        size = float(np.sqrt(lo * hi))      # geometric mid of the bucket
-        for label, policy in (("SporkE", "spork"),
-                              ("FPGA-static", "fpga_static"),
-                              ("FPGA-dynamic", "fpga_dynamic")):
-            effs, costs = [], []
+
+    sizes = {bucket: float(np.sqrt(lo * hi))    # geometric mid of the bucket
+             for bucket, (lo, hi) in BUCKETS_S.items()}
+    traces = {(bucket, seed): synthetic_trace(seed=seed, bias=0.6,
+                                              horizon_s=horizon,
+                                              request_size_s=size,
+                                              mean_demand_workers=100.0)
+              for bucket, size in sizes.items() for seed in range(n_traces)}
+
+    plain, tuned, order = [], [], []
+    for bucket, size in sizes.items():
+        for label, policy in POLICIES:
+            order.append((bucket, size, label))
             for seed in range(n_traces):
-                tr = synthetic_trace(seed=seed, bias=0.6, horizon_s=horizon,
-                                     request_size_s=size,
-                                     mean_demand_workers=100.0)
-                if policy == "fpga_dynamic":
-                    _, tot = ratesim.tune_fpga_dynamic(
-                        tr.counts, tr.request_size_s, fleet)
-                else:
-                    tot = ratesim.simulate(policy, tr.counts,
-                                           tr.request_size_s, fleet)
-                r = report(tot, fleet)
-                effs.append(r.energy_efficiency)
-                costs.append(r.relative_cost)
-            rows.append({"bucket": bucket, "size_s": round(size, 3),
-                         "scheduler": label,
-                         "energy_eff": round(float(np.mean(effs)), 4),
-                         "rel_cost": round(float(np.mean(costs)), 4)})
+                tr = traces[(bucket, seed)]
+                cell = SweepCell(policy, tr.counts, tr.request_size_s, fleet,
+                                 tag=(bucket, label))
+                (tuned if policy == "fpga_dynamic" else plain).append(cell)
+
+    acc: dict[tuple, list] = {}
+    res = sweep(plain)
+    for i, cell in enumerate(res.cells):
+        r = res.report(i)
+        acc.setdefault(cell.tag, []).append((r.energy_efficiency,
+                                             r.relative_cost))
+    for (_, tot), cell in zip(tune_fpga_dynamic_cells(tuned), tuned):
+        r = report(tot, cell.fleet)
+        acc.setdefault(cell.tag, []).append((r.energy_efficiency,
+                                             r.relative_cost))
+
+    rows = []
+    for bucket, size, label in order:
+        vals = acc[(bucket, label)]
+        rows.append({"bucket": bucket, "size_s": round(size, 3),
+                     "scheduler": label,
+                     "energy_eff": round(float(np.mean([v[0] for v in vals])), 4),
+                     "rel_cost": round(float(np.mean([v[1] for v in vals])), 4)})
     return rows
 
 

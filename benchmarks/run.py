@@ -1,22 +1,32 @@
 """Benchmark harness: one function per paper table/figure + the roofline
-summary. Prints ``name,us_per_call,derived`` CSV lines.
+summary. Prints ``name,us_per_call,derived`` CSV lines and records
+per-suite wall time in results/BENCH_sweep.json.
 
 BENCH_FAST=0 for full-size runs (10 traces, 2h horizons, all apps).
 """
 
 from __future__ import annotations
 
-import time
+import os
+import sys
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; make the repo root and src/ importable regardless of cwd.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
 
 
 def main() -> None:
     from benchmarks import (fig2_pareto, fig4_spork_vs_mark,
                             fig5_sensitivity, fig6_worker_efficiency,
                             fig7_request_sizes, roofline,
-                            table8_production, table9_dispatch)
-    from benchmarks.common import emit
+                            table8_production, table9_dispatch, warmup)
+    from benchmarks.common import emit, timed
 
     suites = [
+        ("sweep_warmup", warmup.run),
         ("fig2_pareto", lambda: fig2_pareto.run(pareto=True)),
         ("table8_production", table8_production.run),
         ("table9_dispatch", table9_dispatch.run),
@@ -27,9 +37,8 @@ def main() -> None:
         ("roofline", roofline.run),
     ]
     for name, fn in suites:
-        t0 = time.time()
         try:
-            rows = fn()
+            rows, t0 = timed(fn)
         except Exception as e:  # noqa: BLE001 — keep the harness running
             print(f"{name},0,error={type(e).__name__}:{e}")
             continue

@@ -4,16 +4,18 @@ Azure-like and Alibaba-like app sets (core.traces; the real datasets are
 not redistributable offline — see DESIGN.md §9), short and medium request
 buckets, energy/cost/miss metrics aggregated across apps and normalized
 per §5.1. Spork variants: E (energy), C (cost), B (balanced), + ideal.
+
+All (source, bucket, scheduler, app) cells run through the batched sweep
+engine — the Spork E/C/B variants differ only in the traced energy
+weight, so they share one compiled program and dispatch together.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core.metrics import RunTotals, report
 from repro.core.traces import production_like_apps
 from repro.core.workers import DEFAULT_FLEET
-from repro.sim import ratesim
+from repro.sim.sweep import SweepCell, sweep, tune_fpga_dynamic_cells
 
 from benchmarks.common import fast_params
 
@@ -32,35 +34,47 @@ SCHEDULERS = [
 def run(buckets=("short", "medium"), sources=("azure", "alibaba")) -> list[dict]:
     _, horizon, n_apps = fast_params()
     fleet = DEFAULT_FLEET
-    rows = []
+
+    # App trace batches up front, one set per (source, bucket).
+    app_sets = {}
     for source in sources:
         for bucket in buckets:
             try:
-                apps = production_like_apps(source, bucket, seed=1,
-                                            horizon_s=horizon,
-                                            n_apps=n_apps)
+                app_sets[(source, bucket)] = production_like_apps(
+                    source, bucket, seed=1, horizon_s=horizon, n_apps=n_apps)
             except ValueError:
                 continue
-            for label, policy, kw in SCHEDULERS:
-                total = RunTotals()
-                misses = 0
-                for tr in apps:
-                    if kw.get("tuned"):
-                        _, tot = ratesim.tune_fpga_dynamic(
-                            tr.counts, tr.request_size_s, fleet)
-                    else:
-                        tot = ratesim.simulate(
-                            policy, tr.counts, tr.request_size_s, fleet,
-                            energy_weight=kw.get("energy_weight", 1.0))
-                    total = total.merge(tot)
-                    misses += tot.deadline_misses
-                r = report(total, fleet)
-                rows.append({
-                    "source": source, "bucket": bucket, "scheduler": label,
-                    "energy_eff": round(r.energy_efficiency, 4),
-                    "rel_cost": round(r.relative_cost, 4),
-                    "miss_rate": round(r.deadline_miss_rate, 6),
-                    "cpu_frac": round(r.cpu_request_fraction, 4)})
+
+    plain, tuned, order = [], [], []
+    for (source, bucket), apps in app_sets.items():
+        for label, policy, kw in SCHEDULERS:
+            order.append((source, bucket, label))
+            for tr in apps:
+                cell = SweepCell(policy, tr.counts, tr.request_size_s, fleet,
+                                 energy_weight=kw.get("energy_weight", 1.0),
+                                 tag=(source, bucket, label))
+                (tuned if kw.get("tuned") else plain).append(cell)
+
+    merged: dict[tuple, RunTotals] = {}
+
+    def add(tag, tot):
+        merged[tag] = merged.setdefault(tag, RunTotals()).merge(tot)
+
+    res = sweep(plain)
+    for i, cell in enumerate(res.cells):
+        add(cell.tag, res.totals(i))
+    for (_, tot), cell in zip(tune_fpga_dynamic_cells(tuned), tuned):
+        add(cell.tag, tot)
+
+    rows = []
+    for source, bucket, label in order:
+        r = report(merged[(source, bucket, label)], fleet)
+        rows.append({
+            "source": source, "bucket": bucket, "scheduler": label,
+            "energy_eff": round(r.energy_efficiency, 4),
+            "rel_cost": round(r.relative_cost, 4),
+            "miss_rate": round(r.deadline_miss_rate, 6),
+            "cpu_frac": round(r.cpu_request_fraction, 4)})
     return rows
 
 

@@ -2,31 +2,57 @@
 weighting of the optimal hybrid scheduler and print the pareto front at
 two burstiness levels (Fig. 3), plus the homogeneous corner points.
 
+The study is batched: work traces for both burstiness levels are built up
+front and each platform group solves all its (bias, weight) cells in one
+`solve_dp_batch` dispatch — the min-plus DP vmaps over the weight axis.
+
 Run:  PYTHONPATH=src python examples/pareto_study.py
 """
 
+import os
+import sys
+
 import numpy as np
 
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 from benchmarks.fig2_pareto import interval_work
-from repro.core.dp import pareto_front, solve_dp
+from repro.core.dp import PARETO_WEIGHTS, solve_dp_batch
 from repro.core.metrics import report
 from repro.core.workers import DEFAULT_FLEET
+
+BIASES = (0.55, 0.75)
 
 
 def main() -> None:
     fleet = DEFAULT_FLEET.replace(max_fpgas=2048, max_cpus=10 ** 6)
-    for bias in (0.55, 0.75):
-        W = interval_work(0, bias, 1800)
+    work = {bias: interval_work(0, bias, 1800) for bias in BIASES}
+
+    # Corner points: one batch per homogeneous platform (2 cells each).
+    corners = {}
+    for label, kw in (("CPU-only ", dict(allow_fpga=False)),
+                      ("FPGA-only", dict(allow_cpu=False))):
+        sols = solve_dp_batch(np.stack([work[b] for b in BIASES]), fleet,
+                              [1.0] * len(BIASES), **kw)
+        corners[label] = dict(zip(BIASES, sols))
+
+    # Hybrid pareto fronts: all (bias, weight) cells in ONE dispatch.
+    front_cells = [(bias, float(w)) for bias in BIASES
+                   for w in PARETO_WEIGHTS]
+    sols = solve_dp_batch(np.stack([work[b] for b, _ in front_cells]), fleet,
+                          [w for _, w in front_cells])
+    fronts = {bias: [] for bias in BIASES}
+    for (bias, w), sol in zip(front_cells, sols):
+        fronts[bias].append((w, sol))
+
+    for bias in BIASES:
         print(f"=== burstiness b={bias} ===")
-        for label, kw in (("CPU-only ", dict(allow_fpga=False)),
-                          ("FPGA-only", dict(allow_cpu=False))):
-            sol = solve_dp(W, fleet, energy_weight=1.0, **kw)
-            r = report(sol.totals, fleet)
+        for label in corners:
+            r = report(corners[label][bias].totals, fleet)
             print(f"  {label}: eff={r.energy_efficiency:.3f} "
                   f"cost={r.relative_cost:.3f}")
         print("  hybrid pareto front (w: cost-opt -> energy-opt):")
-        for sol, w in zip(pareto_front(W, fleet),
-                          [0.0] + list(np.geomspace(0.02, 1.0, 9))):
+        for w, sol in fronts[bias]:
             r = report(sol.totals, fleet)
             print(f"    w={w:5.3f} eff={r.energy_efficiency:.3f} "
                   f"cost={r.relative_cost:.3f} "

@@ -101,10 +101,12 @@ def minplus_step_jnp(F: jnp.ndarray, yc_prev: jnp.ndarray, yc_cur: jnp.ndarray,
     return jnp.min(m, axis=0), jnp.argmin(m, axis=0).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "allow_cpu", "use_kernel"))
-def _dp_forward(W: jnp.ndarray, stage_obj: jnp.ndarray, y_c: jnp.ndarray,
-                coeffs: jnp.ndarray, n_levels: int, allow_cpu: bool,
-                use_kernel: bool = False):
+def _dp_forward_core(stage_obj: jnp.ndarray, y_c: jnp.ndarray,
+                     coeffs: jnp.ndarray, n_levels: int, allow_cpu: bool,
+                     use_kernel: bool = False):
+    """Forward min-plus pass + backtrack for one (stage_obj, y_c, coeffs)
+    problem. Unjitted: wrapped by `_dp_forward` (single) and vmapped by
+    `_solve_batch` (all energy weights / traces in one dispatch)."""
     af, df, ac, dc = coeffs
     zero_yc = jnp.zeros((n_levels,), dtype=jnp.float32)
 
@@ -138,6 +140,114 @@ def _dp_forward(W: jnp.ndarray, stage_obj: jnp.ndarray, y_c: jnp.ndarray,
     return path, jnp.min(end)
 
 
+@functools.partial(jax.jit, static_argnames=("n_levels", "allow_cpu", "use_kernel"))
+def _dp_forward(W: jnp.ndarray, stage_obj: jnp.ndarray, y_c: jnp.ndarray,
+                coeffs: jnp.ndarray, n_levels: int, allow_cpu: bool,
+                use_kernel: bool = False):
+    del W  # shape information only; the stage tables already encode it
+    return _dp_forward_core(stage_obj, y_c, coeffs, n_levels, allow_cpu,
+                            use_kernel)
+
+
+def _objective_weights(energy_weight: float, fleet: FleetParams):
+    """(we, wc) mixing weights in normalized objective units."""
+    e_unit = fleet.fpga.busy_w * fleet.T_s
+    c_unit = fleet.fpga.cost_per_s * fleet.T_s
+    we = energy_weight / e_unit if energy_weight > 0 else 0.0
+    wc = (1 - energy_weight) / c_unit if energy_weight < 1 else 0.0
+    if energy_weight >= 1.0:
+        we, wc = 1.0, 0.0
+    if energy_weight <= 0.0:
+        we, wc = 0.0, 1.0
+    return we, wc
+
+
+def _churn_coeffs(we, wc, fleet: FleetParams):
+    return [
+        we * fleet.fpga.spin_up_energy_j
+        + wc * fleet.fpga.cost_per_s * fleet.fpga.spin_up_s,
+        we * fleet.fpga.spin_down_energy_j,
+        we * fleet.cpu.spin_up_energy_j
+        + wc * fleet.cpu.cost_per_s * fleet.cpu.spin_up_s,
+        we * fleet.cpu.spin_down_energy_j,
+    ]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fleet", "n_levels", "allow_cpu",
+                                    "use_kernel"))
+def _solve_batch(W_b: jnp.ndarray, we_b: jnp.ndarray, wc_b: jnp.ndarray,
+                 coeffs_b: jnp.ndarray, fleet: FleetParams, n_levels: int,
+                 allow_cpu: bool, use_kernel: bool = False):
+    """Stage tables + min-plus forward for a whole batch in one dispatch.
+
+    W_b: (B, T) per-interval work; we_b/wc_b: (B,) objective weights;
+    coeffs_b: (B, 4) churn coefficients. Returns (paths (B, T), obj (B,)).
+    """
+    stage_e, stage_c, y_c, _, _ = jax.vmap(
+        lambda w: _stage_tables(w, fleet, n_levels, allow_cpu))(W_b)
+    stage_obj = (we_b[:, None, None] * stage_e
+                 + wc_b[:, None, None] * stage_c)
+    return jax.vmap(
+        lambda s, y, c: _dp_forward_core(s, y, c, n_levels, allow_cpu,
+                                         use_kernel))(stage_obj, y_c,
+                                                      coeffs_b)
+
+
+def solve_dp_batch(work_batch: np.ndarray, fleet: FleetParams,
+                   energy_weights, allow_cpu: bool = True,
+                   allow_fpga: bool = True, n_levels: int | None = None,
+                   use_kernel: bool = False) -> list[DpSolution]:
+    """Batched `solve_dp`: row i of ``work_batch`` is solved with
+    ``energy_weights[i]`` in a handful of vmapped dispatches. Build the
+    (trace x weight) cross product in the caller; per-row results equal
+    `solve_dp` at the same ``n_levels``.
+
+    By default rows are bucketed by their own peak-demand level count
+    (rounded up to a multiple of 128) and each bucket dispatches once —
+    the min-plus transition is O(n_levels^2) per interval, so solving a
+    calm trace at a bursty trace's level count would waste orders of
+    magnitude of work. The DP optimum is invariant to extra levels (stage
+    costs grow monotonically above the peak need), so bucketing does not
+    change results. Pass an explicit ``n_levels`` for one shared-shape
+    dispatch."""
+    _check_structure(fleet)
+    W_np = np.asarray(work_batch, dtype=np.float64)
+    if W_np.ndim != 2:
+        raise ValueError(f"work_batch must be (B, T), got {W_np.shape}")
+    B = W_np.shape[0]
+    weights = np.asarray(energy_weights, dtype=np.float64)
+    if weights.shape != (B,):
+        raise ValueError("energy_weights must align with work_batch rows")
+
+    if not allow_fpga:
+        buckets = np.ones((B,), dtype=np.int64)
+    elif n_levels is not None:
+        buckets = np.full((B,), n_levels, dtype=np.int64)
+    else:
+        per_row = np.ceil(W_np.max(axis=1) / (fleet.S * fleet.T_s)) + 2
+        buckets = (128 * np.ceil(per_row / 128)).astype(np.int64)
+
+    wewc = np.array([_objective_weights(float(w), fleet) for w in weights],
+                    np.float32)
+    coeffs_b = np.array([_churn_coeffs(we, wc, fleet) for we, wc in wewc],
+                        np.float32)
+
+    out: list[DpSolution | None] = [None] * B
+    for nl in np.unique(buckets):
+        rows = np.nonzero(buckets == nl)[0]
+        paths, objs = _solve_batch(jnp.asarray(W_np[rows], dtype=jnp.float32),
+                                   jnp.asarray(wewc[rows, 0]),
+                                   jnp.asarray(wewc[rows, 1]),
+                                   jnp.asarray(coeffs_b[rows]), fleet,
+                                   int(nl), allow_cpu, use_kernel)
+        paths, objs = np.asarray(paths), np.asarray(objs)
+        for k, b in enumerate(rows):
+            out[b] = evaluate_path(W_np[b], paths[k], fleet,
+                                   objective=float(objs[k]))
+    return out
+
+
 def solve_dp(work_cpu_s: np.ndarray, fleet: FleetParams,
              energy_weight: float = 1.0, allow_cpu: bool = True,
              allow_fpga: bool = True, n_levels: int | None = None,
@@ -152,21 +262,9 @@ def solve_dp(work_cpu_s: np.ndarray, fleet: FleetParams,
         n_levels = 1
 
     stage_e, stage_c, y_c, _, _ = _stage_tables(W, fleet, n_levels, allow_cpu)
-    e_unit = fleet.fpga.busy_w * Ts
-    c_unit = fleet.fpga.cost_per_s * Ts
-    we = energy_weight / e_unit if energy_weight > 0 else 0.0
-    wc = (1 - energy_weight) / c_unit if energy_weight < 1 else 0.0
-    if energy_weight >= 1.0:
-        we, wc = 1.0, 0.0
-    if energy_weight <= 0.0:
-        we, wc = 0.0, 1.0
+    we, wc = _objective_weights(energy_weight, fleet)
     stage_obj = we * stage_e + wc * stage_c
-    coeffs = jnp.asarray([
-        we * fleet.fpga.spin_up_energy_j + wc * fleet.fpga.cost_per_s * fleet.fpga.spin_up_s,
-        we * fleet.fpga.spin_down_energy_j,
-        we * fleet.cpu.spin_up_energy_j + wc * fleet.cpu.cost_per_s * fleet.cpu.spin_up_s,
-        we * fleet.cpu.spin_down_energy_j,
-    ], dtype=jnp.float32)
+    coeffs = jnp.asarray(_churn_coeffs(we, wc, fleet), dtype=jnp.float32)
 
     path, obj = _dp_forward(W, stage_obj, y_c, coeffs, n_levels, allow_cpu,
                             use_kernel)
@@ -222,10 +320,19 @@ def evaluate_path(W: np.ndarray, y_fpga: np.ndarray, fleet: FleetParams,
                       totals=totals)
 
 
+PARETO_WEIGHTS = np.concatenate([[0.0], np.geomspace(0.02, 1.0, 9)])
+
+
 def pareto_front(work_cpu_s: np.ndarray, fleet: FleetParams,
                  weights: np.ndarray | None = None, **kw) -> list[DpSolution]:
-    """Sweep the energy/cost weighting (paper Fig. 3 pareto curves)."""
+    """Sweep the energy/cost weighting (paper Fig. 3 pareto curves).
+
+    All weights are solved in ONE `_solve_batch` dispatch: the min-plus
+    forward pass vmaps over the weight axis instead of re-running the DP
+    per weight."""
     if weights is None:
-        weights = np.concatenate([[0.0], np.geomspace(0.02, 1.0, 9)])
-    return [solve_dp(work_cpu_s, fleet, energy_weight=float(w), **kw)
-            for w in weights]
+        weights = PARETO_WEIGHTS
+    weights = np.asarray(weights, dtype=np.float64)
+    W = np.asarray(work_cpu_s, dtype=np.float64)
+    W_b = np.broadcast_to(W, (len(weights), len(W)))
+    return solve_dp_batch(W_b, fleet, weights, **kw)

@@ -28,9 +28,36 @@ from __future__ import annotations
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from .breakeven import ObjectiveCoeffs
+
+
+_PFX_BLOCK = 32
+
+
+def _prefix_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum along the last axis, batch-friendly.
+
+    XLA:CPU lowers `cumsum`/`associative_scan` to long sequential or
+    many-stage op chains that dominate the rate simulator's per-interval
+    tick when vmapped over sweep cells. For block-aligned sizes this uses
+    a two-level blocked scan instead — prefix-within-block via one small
+    triangular matmul plus a tiny cross-block offset scan — a handful of
+    well-vectorized ops and negligible flops."""
+    n = x.shape[-1]
+    b = _PFX_BLOCK
+    if n < 2 * b or n % b:
+        return jax.lax.associative_scan(jnp.add, x, axis=-1)
+    k = n // b
+    blocks = x.reshape(*x.shape[:-1], k, b)
+    incl = jnp.triu(jnp.ones((b, b), x.dtype))       # incl[i, j]=1 for i<=j
+    within = blocks @ incl                           # prefix within block
+    sums = within[..., -1]                           # block totals (… , k)
+    strict = jnp.triu(jnp.ones((k, k), x.dtype), 1)  # exclusive offsets
+    offsets = sums @ strict
+    return (within + offsets[..., None]).reshape(x.shape)
 
 
 def amortization_vector(life_sum: jnp.ndarray, life_cnt: jnp.ndarray,
@@ -47,23 +74,40 @@ def amortization_vector(life_sum: jnp.ndarray, life_cnt: jnp.ndarray,
     per_level = amort_unit / epochs                       # cost of a spin-up at level
     lvl = jnp.arange(n)
     gated = jnp.where(lvl >= n_curr, per_level, 0.0)      # only new workers
-    csum = jnp.cumsum(gated)
+    csum = _prefix_sum(gated)
     # amort(n_hat) = sum over levels < n_hat
     return jnp.concatenate([jnp.zeros((1,)), csum])[:n]
 
 
 def expected_objective_jnp(hist: jnp.ndarray, coeffs: ObjectiveCoeffs,
                            amort: jnp.ndarray) -> jnp.ndarray:
-    """J(n_hat) for all n_hat; hist is the unnormalized count histogram."""
+    """J(n_hat) for all n_hat; hist is the unnormalized count histogram.
+
+    O(N) via prefix sums (the naive candidate x bin form is O(N^2) —
+    dominant in the rate simulator's per-interval tick, see the `minplus`
+    and `spork_predict` kernels for the materialization-free TPU paths):
+
+      E[min(c, n)]  = M(c-1) + c * (P_tot - P(c-1))
+      E[(c - n)+]   = c * P(c-1) - M(c-1)
+      E[(n - c)+]   = (M_tot - M(c-1)) - c * (P_tot - P(c-1))
+
+    with P/M the cumulative probability / first-moment sums over bins.
+    """
     n = hist.shape[0]
     total = jnp.sum(hist)
     p = hist / jnp.maximum(total, 1.0)
-    cand = jnp.arange(n, dtype=jnp.float32)[:, None]      # n_hat
-    bins = jnp.arange(n, dtype=jnp.float32)[None, :]      # n
-    per = (coeffs.co_min * jnp.minimum(cand, bins)
-           + coeffs.co_over * jnp.maximum(cand - bins, 0.0)
-           + coeffs.co_under * jnp.maximum(bins - cand, 0.0))
-    j = per @ p + amort
+    bins = jnp.arange(n, dtype=jnp.float32)
+    P = _prefix_sum(p)
+    M = _prefix_sum(p * bins)
+    zero = jnp.zeros((1,), P.dtype)
+    Pm1 = jnp.concatenate([zero, P[:-1]])                 # P(c-1)
+    Mm1 = jnp.concatenate([zero, M[:-1]])                 # M(c-1)
+    tail_p = P[-1] - Pm1                                  # P(n >= c)
+    e_min = Mm1 + bins * tail_p
+    e_over = bins * Pm1 - Mm1
+    e_under = (M[-1] - Mm1) - bins * tail_p
+    j = (coeffs.co_min * e_min + coeffs.co_over * e_over
+         + coeffs.co_under * e_under + amort)
     # Candidate range: [min observed bin, max observed bin] (Alg. 2).
     has = hist > 0
     idx = jnp.arange(n)

@@ -14,12 +14,19 @@ import jax
 import jax.numpy as jnp
 
 
+def _axis_size(axis: str) -> int:
+    """Size of a named mapped axis. `psum` of the literal 1 is constant-
+    folded to the axis size as a Python int (jax.lax.axis_size only
+    exists on newer jax versions)."""
+    return jax.lax.psum(1, axis)
+
+
 def hierarchical_psum(x, intra_axis: str = "data", inter_axis: str = "pod"):
     """Two-level reduction inside shard_map: scatter intra, reduce inter,
     gather intra. Equivalent to psum over both axes. Scatters along the
     first dim divisible by the intra-axis size; falls back to a flat psum
     for tensors too small to scatter."""
-    n_intra = jax.lax.axis_size(intra_axis)
+    n_intra = _axis_size(intra_axis)
     dim = next((i for i, s in enumerate(x.shape) if s % n_intra == 0), None)
     if dim is None:
         return jax.lax.psum(x, (intra_axis, inter_axis))
@@ -32,7 +39,7 @@ def hierarchical_psum(x, intra_axis: str = "data", inter_axis: str = "pod"):
 def ring_all_gather(x, axis: str):
     """Explicit ring all-gather via ppermute (one hop per step; each hop
     can overlap with compute scheduled between steps)."""
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % n) for i in range(n)]
     pieces = [x]

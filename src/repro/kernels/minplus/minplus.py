@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK = 128
-_NEG = 3.0e38
+# Large *positive* sentinel: padded source levels must never win the min.
+_PAD_HI = 3.0e38
 
 
 def _kernel(params_ref, f_ref, ycp_ref, ycc_ref, out_ref, arg_ref, *,
@@ -51,7 +52,7 @@ def _kernel(params_ref, f_ref, ycp_ref, ycc_ref, out_ref, arg_ref, *,
              + dc * relu(ycp[:, None] - ycc[None, :]))
     vals = f[:, None] + trans
     # mask padded source levels
-    vals = jnp.where(ii < n_valid, vals, _NEG)
+    vals = jnp.where(ii < n_valid, vals, _PAD_HI)
 
     local_min = jnp.min(vals, axis=0)
     local_arg = (i_blk * block + jnp.argmin(vals, axis=0)).astype(jnp.int32)
@@ -77,7 +78,7 @@ def minplus_pallas(F: jnp.ndarray, yc_prev: jnp.ndarray, yc_cur: jnp.ndarray,
     n_pad = ((n + BLOCK - 1) // BLOCK) * BLOCK
     pad = n_pad - n
     Fp = jnp.pad(F.astype(jnp.float32), (0, pad),
-                 constant_values=_NEG)[None, :]
+                 constant_values=_PAD_HI)[None, :]
     ycp = jnp.pad(yc_prev.astype(jnp.float32), (0, pad))[None, :]
     ycc = jnp.pad(yc_cur.astype(jnp.float32), (0, pad))[None, :]
     prm = params.astype(jnp.float32).reshape(1, 4)

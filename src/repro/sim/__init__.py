@@ -1,8 +1,13 @@
 """Simulation engines for the Spork evaluation.
 
 `ratesim` — vectorized interval/second-level simulator in JAX (jit + vmap
-over traces and worker parameters; shard_map over device meshes for large
-sweeps). The workhorse for every rate-level experiment.
+over traces and worker parameters). The workhorse for every rate-level
+experiment. `simulate_batch` runs a batch of traces per dispatch;
+`tune_fpga_dynamic` evaluates all headroom levels in one dispatch.
+
+`sweep` — the batched sweep engine: groups arbitrary parameter-grid cells
+(`SweepCell`) by their static axes and simulates each group in one jitted
+vmapped dispatch. The benchmark suites (Figs. 5-7, Table 8) run on it.
 
 `events` — exact discrete-event simulator (per-request semantics) used for
 dispatch-policy studies (paper Table 9) and as ground truth in tests.

@@ -1,0 +1,107 @@
+"""Minimal deterministic stand-in for the slice of the `hypothesis` API
+this suite uses, so tests collect and run in environments without the
+real package (the container image does not ship it; see
+requirements-dev.txt for the real dependency).
+
+Semantics: `@given` runs the test `max_examples` times (from `@settings`,
+default 10) with values drawn from seeded `numpy` generators — the seed
+derives from the test name and example index, so runs are reproducible.
+No shrinking, no example database; failures report the drawn arguments.
+
+Supported strategies: floats, integers, sampled_from, lists, data.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw_fn, label: str):
+        self._draw = draw_fn
+        self._label = label
+
+    def __repr__(self) -> str:       # pragma: no cover - debugging aid
+        return f"shim.{self._label}"
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                     f"floats({min_value}, {max_value})")
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                     f"integers({min_value}, {max_value})")
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                     "sampled_from")
+
+
+def _lists(elements, min_size=0, max_size=None):
+    def draw(rng):
+        hi = min_size + 10 if max_size is None else max_size
+        size = int(rng.integers(min_size, hi + 1))
+        return [elements._draw(rng) for _ in range(size)]
+    return _Strategy(draw, f"lists(min={min_size}, max={max_size})")
+
+
+class _DataObject:
+    """Interactive draws, mirroring `st.data()`'s DataObject."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy._draw(self._rng)
+
+
+_DATA_SENTINEL = _Strategy(None, "data()")
+
+strategies = types.SimpleNamespace(
+    floats=_floats, integers=_integers, sampled_from=_sampled_from,
+    lists=_lists, data=lambda: _DATA_SENTINEL)
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_shim_max_examples", 10)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for example in range(n):
+                rng = np.random.default_rng((base, example))
+                drawn = {name: (_DataObject(rng) if s is _DATA_SENTINEL
+                                else s._draw(rng))
+                         for name, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception:
+                    print(f"shim-hypothesis falsifying example "
+                          f"({fn.__qualname__}, #{example}): {drawn}")
+                    raise
+
+        # Hide the drawn parameters from pytest's fixture resolution (it
+        # would otherwise follow __wrapped__ to the original signature).
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strats]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco

@@ -1,6 +1,9 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # environment without hypothesis: local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import breakeven as bk
 from repro.core.workers import DEFAULT_FLEET, FleetParams

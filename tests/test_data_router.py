@@ -3,7 +3,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # environment without hypothesis: local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.traces import synthetic_trace

@@ -19,7 +19,8 @@ from repro.distributed import sharding as shd
 
 @pytest.fixture()
 def mesh16():
-    m = AbstractMesh((16, 16), ("data", "model"))
+    # AbstractMesh takes ((name, size), ...) pairs on this jax version.
+    m = AbstractMesh((("data", 16), ("model", 16)))
     shd.set_mesh(m)
     yield m
     shd.clear_mesh()

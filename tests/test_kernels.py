@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # environment without hypothesis: local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.breakeven import energy_coeffs
 from repro.core.predictor import amortization_vector
@@ -53,6 +56,42 @@ def test_minplus_property(seed, n):
     got, arg = minplus_pallas(F, ycp, ycc, jnp.asarray(coeffs), interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [130, 257])
+def test_minplus_non_multiple_of_block(n):
+    """Padded tail (BLOCK=128 tiling) must not leak the +3e38 sentinel
+    into values or argmins; compare against the jnp oracle exactly."""
+    from repro.core.dp import minplus_step_jnp
+    rng = np.random.default_rng(n * 7 + 1)
+    F = jnp.asarray(rng.normal(0, 50, n), jnp.float32)
+    ycp = jnp.asarray(rng.integers(0, 20, n), jnp.float32)
+    ycc = jnp.asarray(rng.integers(0, 20, n), jnp.float32)
+    coeffs = (120.0, 2.5, 0.4, 0.6)
+    want, want_arg = minplus_step_jnp(F, ycp, ycc, coeffs)
+    got, got_arg = minplus_pallas(F, ycp, ycc, jnp.asarray(coeffs),
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    assert np.all(np.asarray(got_arg) < n)
+    np.testing.assert_array_equal(np.asarray(got_arg), np.asarray(want_arg))
+
+
+@pytest.mark.parametrize("n", [130, 257])
+def test_minplus_argmin_tie_breaking(n):
+    """Both paths must return the FIRST minimizer: quantized F plus zero
+    transition costs produce many exact ties, within and across blocks."""
+    from repro.core.dp import minplus_step_jnp
+    rng = np.random.default_rng(n)
+    F = jnp.asarray(rng.integers(0, 3, n).astype(np.float32))  # heavy ties
+    ycp = jnp.zeros((n,), jnp.float32)
+    ycc = jnp.zeros((n,), jnp.float32)
+    coeffs = (0.0, 0.0, 0.0, 0.0)       # trans == 0: every min is a tie
+    want, want_arg = minplus_step_jnp(F, ycp, ycc, coeffs)
+    got, got_arg = minplus_pallas(F, ycp, ycc, jnp.asarray(coeffs),
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_arg), np.asarray(want_arg))
 
 
 def test_minplus_inside_dp_solver():

@@ -3,7 +3,10 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # environment without hypothesis: local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.breakeven import ObjectiveCoeffs, energy_coeffs
 from repro.core.predictor import (Predictor, amortization_vector,

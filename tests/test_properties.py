@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # environment without hypothesis: local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.dp import evaluate_path, solve_dp
 from repro.core.metrics import report

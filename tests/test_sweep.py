@@ -1,0 +1,147 @@
+"""Batched sweep engine vs per-call simulation: exact-policy equivalence.
+
+Acceptance contract: per-cell totals from `simulate_batch` / `sweep`
+match per-call `ratesim.simulate` `RunTotals` to float32 tolerance, for
+every policy, including non-default fleets (spin-up variants exercise the
+latency-free canonical regrouping) and the batched headroom tuner and
+min-plus DP batches.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dp import PARETO_WEIGHTS, pareto_front, solve_dp, solve_dp_batch
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim import ratesim
+from repro.sim.sweep import SweepCell, sweep, tune_fpga_dynamic_cells
+
+RTOL = 2e-4     # float32 accumulation over ~600s horizons
+
+
+def _traces(n=3, horizon=600, mean=30.0):
+    return [synthetic_trace(seed=s, bias=0.55 + 0.1 * s, horizon_s=horizon,
+                            request_size_s=0.05, mean_demand_workers=mean)
+            for s in range(n)]
+
+
+def _assert_totals_close(want, got, tag=""):
+    for f in ("energy_j", "cost_usd", "work_cpu_s", "work_on_fpga_cpu_s",
+              "work_on_cpu_cpu_s", "fpga_idle_j", "fpga_busy_j",
+              "cpu_busy_j", "spinup_j"):
+        w, g = getattr(want, f), getattr(got, f)
+        assert abs(w - g) <= RTOL * max(abs(w), 1.0), (tag, f, w, g)
+    for f in ("requests", "deadline_misses", "fpga_spinups", "cpu_spinups"):
+        assert getattr(want, f) == getattr(got, f), (tag, f)
+
+
+@pytest.mark.parametrize("policy", ["spork", "cpu_dynamic", "fpga_static",
+                                    "mark_ideal", "spork_ideal"])
+def test_simulate_batch_matches_per_call(policy):
+    traces = _traces()
+    counts_b = np.stack([t.counts for t in traces])
+    acc = ratesim.simulate_batch(policy, counts_b, 0.05, DEFAULT_FLEET)
+    batched = ratesim.batch_totals(acc, counts_b, 0.05)
+    for tr, got in zip(traces, batched):
+        want = ratesim.simulate(policy, tr.counts, 0.05, DEFAULT_FLEET)
+        _assert_totals_close(want, got, policy)
+
+
+def test_sweep_matches_per_call_across_fleets_and_weights():
+    """Mixed grid: spin-up variants (static axis + canonical regrouping),
+    speedup variants and energy weights (traced axes), all policies."""
+    traces = _traces()
+    fleets = [DEFAULT_FLEET,
+              DEFAULT_FLEET.replace(fpga=DEFAULT_FLEET.fpga.replace(
+                  spin_up_s=60.0)),
+              DEFAULT_FLEET.replace(fpga=DEFAULT_FLEET.fpga.replace(
+                  speedup=4.0))]
+    cells = []
+    for fi, fleet in enumerate(fleets):
+        for tr in traces:
+            for policy in ("spork", "cpu_dynamic", "fpga_static",
+                           "mark_ideal"):
+                ew = 0.5 if policy == "spork" else 1.0
+                cells.append(SweepCell(policy, tr.counts, tr.request_size_s,
+                                       fleet, energy_weight=ew, tag=fi))
+    res = sweep(cells)
+    for i, c in enumerate(res.cells):
+        want = ratesim.simulate(c.policy, c.counts, c.size_s, c.fleet,
+                                energy_weight=c.energy_weight)
+        _assert_totals_close(want, res.totals(i), (c.policy, c.tag))
+
+
+def test_sweep_rejects_unknown_policy():
+    tr = _traces(1)[0]
+    with pytest.raises(ValueError, match="unknown policy"):
+        sweep([SweepCell("nope", tr.counts, 0.05, DEFAULT_FLEET)])
+
+
+def test_tune_fpga_dynamic_matches_serial_search():
+    """Batched headroom tuning == the serial least-k-with-zero-misses loop."""
+    for tr in _traces(2):
+        unit = ratesim.headroom_unit(tr.counts, 0.05, DEFAULT_FLEET)
+        serial = None
+        for k in range(0, 9):
+            tot = ratesim.simulate("fpga_dynamic", tr.counts, 0.05,
+                                   DEFAULT_FLEET, headroom=k * unit)
+            serial = (k * unit, tot)
+            if tot.deadline_misses == 0:
+                break
+        h, tot = ratesim.tune_fpga_dynamic(tr.counts, 0.05, DEFAULT_FLEET,
+                                           max_k=8)
+        assert h == serial[0]
+        _assert_totals_close(serial[1], tot, "tune")
+
+
+def test_tune_fpga_dynamic_cells_matches_single():
+    cells = [SweepCell("fpga_dynamic", tr.counts, 0.05, DEFAULT_FLEET)
+             for tr in _traces(2)]
+    got = tune_fpga_dynamic_cells(cells, max_k=8)
+    for (h, tot), c in zip(got, cells):
+        h2, tot2 = ratesim.tune_fpga_dynamic(c.counts, c.size_s, c.fleet,
+                                             max_k=8)
+        assert h == h2
+        _assert_totals_close(tot2, tot, "tune-cells")
+
+
+# ------------------------------------------------------------------ DP batch
+def _interval_work(seed, bias=0.6, horizon=600):
+    tr = synthetic_trace(seed=seed, bias=bias, horizon_s=horizon,
+                         request_size_s=0.01, mean_demand_workers=50.0)
+    k = horizon // 10
+    return (tr.counts[:k * 10].reshape(k, 10).sum(1) * 0.01)
+
+
+def test_solve_dp_batch_matches_solve_dp():
+    fleet = DEFAULT_FLEET
+    Ws = np.stack([_interval_work(s) for s in range(3)])
+    weights = [1.0, 0.5, 0.0]
+    sols = solve_dp_batch(Ws, fleet, weights)
+    for i, w in enumerate(weights):
+        n_levels = int(np.ceil(Ws[i].max() / (fleet.S * fleet.T_s))) + 2
+        n_levels = int(128 * np.ceil(n_levels / 128))
+        ref = solve_dp(Ws[i], fleet, energy_weight=w, n_levels=n_levels)
+        np.testing.assert_array_equal(sols[i].y_fpga, ref.y_fpga)
+        assert abs(sols[i].objective - ref.objective) \
+            <= RTOL * max(abs(ref.objective), 1.0)
+
+
+def test_solve_dp_batch_platform_flags():
+    fleet = DEFAULT_FLEET
+    W = _interval_work(0)
+    for kw in (dict(allow_cpu=False), dict(allow_fpga=False)):
+        sol, = solve_dp_batch(W[None], fleet, [1.0], **kw)
+        ref = solve_dp(W, fleet, energy_weight=1.0, **kw)
+        np.testing.assert_array_equal(sol.y_fpga, ref.y_fpga)
+
+
+def test_pareto_front_batched_matches_serial():
+    fleet = DEFAULT_FLEET
+    W = _interval_work(1)
+    front = pareto_front(W, fleet)
+    n_levels = int(np.ceil(W.max() / (fleet.S * fleet.T_s))) + 2
+    n_levels = int(128 * np.ceil(n_levels / 128))
+    for sol, w in zip(front, PARETO_WEIGHTS):
+        ref = solve_dp(W, fleet, energy_weight=float(w), n_levels=n_levels)
+        np.testing.assert_array_equal(sol.y_fpga, ref.y_fpga)
