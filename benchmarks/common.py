@@ -50,15 +50,29 @@ def emit(name: str, rows: list[dict], t0: float) -> None:
     record_sweep(name, wall_s, len(rows))
 
 
+HISTORY_CAP = 50
+
+
 def record_sweep(name: str, wall_s: float, n_rows: int) -> None:
-    """Merge one suite's timing into BENCH_sweep.json (best effort)."""
+    """Merge one suite's timing into BENCH_sweep.json (best effort).
+
+    The top-level fields hold the latest run (what CI's perf guard
+    reads); ``history`` appends one `{wall_s, rows, fast}` entry per run
+    (capped at the trailing HISTORY_CAP) so the file records a perf
+    trajectory across PRs instead of overwriting it."""
     try:
         with open(SWEEP_JSON) as f:
             data = json.load(f)
     except (OSError, ValueError):
         data = {}
-    data[name] = {"wall_s": round(wall_s, 3), "rows": n_rows,
-                  "fast": FAST}
+    entry = {"wall_s": round(wall_s, 3), "rows": n_rows, "fast": FAST}
+    prev = data.get(name) or {}
+    history = list(prev.get("history", []))
+    if not history and prev:        # migrate pre-history records
+        history.append({k: prev[k] for k in ("wall_s", "rows", "fast")
+                        if k in prev})
+    history = (history + [entry])[-HISTORY_CAP:]
+    data[name] = {**entry, "history": history}
     try:
         os.makedirs(os.path.dirname(SWEEP_JSON), exist_ok=True)
         with open(SWEEP_JSON, "w") as f:

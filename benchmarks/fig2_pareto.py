@@ -10,9 +10,17 @@ The (bias, seed, platform, objective) grid is solved with
 platform group (static `allow_cpu`/`allow_fpga` axes) runs every
 (trace, weight) cell in one vmapped min-plus dispatch — including the
 ten pareto weights — instead of one `solve_dp` call per cell.
+
+The DP runs on the structured O(N log N) min-plus transition (the
+`transition="structured"` backend; monotone segment decomposition, see
+core.dp), which removed this suite's O(N^2)-per-interval compute wall:
+~56s -> well under the 30s CI ceiling in fast mode. Set
+BENCH_TRANSITION=dense (or kernel) to benchmark the other backends.
 """
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
@@ -26,6 +34,8 @@ from benchmarks.common import fast_params
 PLATFORMS = (("hybrid", dict()),
              ("cpu_only", dict(allow_fpga=False)),
              ("fpga_only", dict(allow_cpu=False)))
+
+TRANSITION = os.environ.get("BENCH_TRANSITION", "structured")
 
 
 def interval_work(seed: int, bias: float, horizon_s: int,
@@ -68,7 +78,8 @@ def run(pareto: bool = False) -> list[dict]:
     for platform, kw in PLATFORMS:
         group = cells[platform]
         sols = solve_dp_batch(np.stack([w for _, w, _ in group]), fleet,
-                              [ew for _, _, ew in group], **kw)
+                              [ew for _, _, ew in group],
+                              transition=TRANSITION, **kw)
         for (tag, _, _), sol in zip(group, sols):
             r = report(sol.totals, fleet)
             results.setdefault(tag, []).append(

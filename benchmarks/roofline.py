@@ -18,6 +18,11 @@ Terms per cell (v5e chip constants in launch.mesh):
 plus MODEL_FLOPS = 6*N*D (train; 2*N*D inference, N = active params) and
 the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
 
+Also includes the min-plus DP transition scaling study (``kind:
+"minplus"`` rows): dense O(N^2) vs structured O(N log N) wall time per
+step at N in {128, 512, 2048, 8192}, so the asymptotic win behind the
+fig2 speedup is visible in results/roofline.json.
+
 Usage:
     python -m benchmarks.roofline --collect   # runs the reduced lowerings
     python -m benchmarks.roofline --report    # prints the table
@@ -29,6 +34,7 @@ import argparse
 import json
 import subprocess
 import sys
+import time
 from pathlib import Path
 
 from repro.configs.registry import SHAPES, cells, get_config
@@ -130,13 +136,67 @@ def extrapolate(arch: str, shape: str) -> dict | None:
     return rec
 
 
-def report() -> list[dict]:
+MINPLUS_NS = (128, 512, 2048, 8192)
+
+
+def minplus_scaling(ns=MINPLUS_NS, reps: int = 3) -> list[dict]:
+    """Dense vs structured min-plus transition wall time per step.
+
+    One jitted step per (backend, N), timed post-compile (best of
+    ``reps``), on a random monotone y_c instance — the same contraction
+    the DP runs T times per solve, so the dense/structured ratio here is
+    the per-interval speedup behind fig2."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.dp import minplus_step_jnp, minplus_step_structured
+
+    backends = {"dense": jax.jit(minplus_step_jnp),
+                "structured": jax.jit(
+                    lambda F, p, c, co: minplus_step_structured(
+                        F, p, c, co, check=False))}
+    rows = []
+    for n in ns:
+        rng = np.random.default_rng(n)
+        F = jnp.asarray(rng.normal(0, 100, n), jnp.float32)
+        ycp = jnp.asarray(np.sort(rng.integers(0, n, n))[::-1], jnp.float32)
+        ycc = jnp.asarray(np.sort(rng.integers(0, n, n))[::-1], jnp.float32)
+        coeffs = (500.0, 5.0, 0.75, 0.75)
+        row = {"kind": "minplus", "n": n}
+        for name, fn in backends.items():
+            out, arg = fn(F, ycp, ycc, coeffs)          # compile + warm
+            out.block_until_ready()
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out, arg = fn(F, ycp, ycc, coeffs)
+                out.block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            row[f"{name}_us"] = round(best * 1e6, 1)
+        row["speedup"] = round(row["dense_us"] / max(row["structured_us"],
+                                                     1e-9), 1)
+        rows.append(row)
+    return rows
+
+
+def report(minplus_rows: list[dict] | None = None) -> list[dict]:
+    """Summarize collected lowerings. ``--report`` stays read-mostly:
+    unless fresh minplus scaling rows are passed in (the `run()` entry
+    re-benchmarks them), previously recorded ones are carried over."""
     rows = []
     for arch, shape, _ in cells():
         rec = extrapolate(arch, shape)
         if rec is None:
             continue
         rows.append(rec)
+    if minplus_rows is None:
+        try:
+            prev = json.loads(OUT.read_text())
+        except (OSError, ValueError):
+            prev = []
+        minplus_rows = [r for r in prev if r.get("kind") == "minplus"]
+    rows.extend(minplus_rows)
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps(rows, indent=1))
     return rows
@@ -144,8 +204,10 @@ def report() -> list[dict]:
 
 def run() -> list[dict]:
     """Benchmark-runner entry: summarize whatever has been collected."""
-    rows = report()
-    return [{
+    rows = report(minplus_scaling())
+    minplus_rows = [r for r in rows if r.get("kind") == "minplus"]
+    rows = [r for r in rows if r.get("kind") != "minplus"]
+    return minplus_rows + [{
         "arch": r["arch"], "shape": r["shape"],
         "compute_ms": round(r["compute_s"] * 1e3, 3),
         "memory_ms": round(r["memory_s"] * 1e3, 3),

@@ -24,14 +24,19 @@ def run() -> list[dict]:
              ("azure-like(medium)", 0.68, 0.3),
              ("alibaba-like(short)", 0.58, 0.05)]
     for label, bias, size in cases:
+        # Traces and arrival times are dispatch-policy-independent:
+        # generate once per (case, app) and reuse across all three
+        # policies instead of regenerating inside the dispatcher loop.
+        apps = []
+        for app in range(n_apps):
+            tr = synthetic_trace(seed=100 + app, bias=bias,
+                                 horizon_s=horizon, request_size_s=size,
+                                 mean_demand_workers=8.0)
+            apps.append((tr.arrival_times(seed=7 + app), tr.request_size_s))
         for disp in ("round_robin", "index_packing", "spork"):
             total = RunTotals()
-            for app in range(n_apps):
-                tr = synthetic_trace(seed=100 + app, bias=bias,
-                                     horizon_s=horizon, request_size_s=size,
-                                     mean_demand_workers=8.0)
-                arr = tr.arrival_times(seed=7 + app)
-                tot = simulate_events(arr, tr.request_size_s, fleet,
+            for arr, size_s in apps:
+                tot = simulate_events(arr, size_s, fleet,
                                       dispatcher=disp, horizon_s=horizon)
                 total = total.merge(tot)
             r = report(total, fleet)

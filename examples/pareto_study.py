@@ -4,7 +4,10 @@ two burstiness levels (Fig. 3), plus the homogeneous corner points.
 
 The study is batched: work traces for both burstiness levels are built up
 front and each platform group solves all its (bias, weight) cells in one
-`solve_dp_batch` dispatch — the min-plus DP vmaps over the weight axis.
+`solve_dp_batch` dispatch — the min-plus DP vmaps over the weight axis,
+and each solve runs the structured O(N log N) min-plus transition
+(`transition="structured"`, the default; see core.dp for the monotone
+segment decomposition) rather than the dense O(N^2) contraction.
 
 Run:  PYTHONPATH=src python examples/pareto_study.py
 """
@@ -36,7 +39,8 @@ def main() -> None:
                               [1.0] * len(BIASES), **kw)
         corners[label] = dict(zip(BIASES, sols))
 
-    # Hybrid pareto fronts: all (bias, weight) cells in ONE dispatch.
+    # Hybrid pareto fronts: all (bias, weight) cells in ONE dispatch,
+    # each solved with the structured min-plus transition.
     front_cells = [(bias, float(w)) for bias in BIASES
                    for w in PARETO_WEIGHTS]
     sols = solve_dp_batch(np.stack([work[b] for b, _ in front_cells]), fleet,

@@ -12,17 +12,33 @@ import jax
 import jax.numpy as jnp
 
 from .minplus import minplus_pallas
+from .structured import minplus_structured_pallas
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _pack(coeffs) -> jnp.ndarray:
+    af, df, ac, dc = coeffs
+    return jnp.stack([jnp.asarray(af, jnp.float32),
+                      jnp.asarray(df, jnp.float32),
+                      jnp.asarray(ac, jnp.float32),
+                      jnp.asarray(dc, jnp.float32)])
+
+
 def minplus_step(F: jnp.ndarray, yc_prev: jnp.ndarray, yc_cur: jnp.ndarray,
                  coeffs) -> tuple[jnp.ndarray, jnp.ndarray]:
-    af, df, ac, dc = coeffs
-    params = jnp.stack([jnp.asarray(af, jnp.float32),
-                        jnp.asarray(df, jnp.float32),
-                        jnp.asarray(ac, jnp.float32),
-                        jnp.asarray(dc, jnp.float32)])
-    return minplus_pallas(F, yc_prev, yc_cur, params, interpret=_interpret())
+    """Dense O(N^2) transition kernel (the original HBM-light contraction)."""
+    return minplus_pallas(F, yc_prev, yc_cur, _pack(coeffs),
+                          interpret=_interpret())
+
+
+def minplus_step_structured(F: jnp.ndarray, yc_prev: jnp.ndarray,
+                            yc_cur: jnp.ndarray,
+                            coeffs) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Structured O(N log N) transition kernel; requires non-increasing
+    y_c vectors (guaranteed by `core.dp._stage_tables`). This is the
+    ``transition="kernel"`` backend of the DP solvers."""
+    return minplus_structured_pallas(F, yc_prev, yc_cur, _pack(coeffs),
+                                     interpret=_interpret())

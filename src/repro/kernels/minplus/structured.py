@@ -1,0 +1,178 @@
+"""Structured (monotone-decomposition) min-plus transition kernel.
+
+Scan-based Pallas variant of `repro.core.dp.minplus_step_structured`: the
+same <= 3-segment decomposition (derivation in the core.dp module
+docstring), computed as one kernel invocation whose row vectors and scan
+tables live in VMEM for the whole step:
+
+  * prefix/suffix segment mins: Hillis-Steele doubling min-scans over the
+    (value, index) pairs — log2(N) static rounds of shift + select;
+  * middle segment: a doubling (sparse) range-min table built from the
+    same strided scans, queried with two overlapping power-of-two blocks;
+  * the y_c crossing k(j): branchless vectorized binary search (the
+    in-kernel equivalent of searchsorted on the negated levels).
+
+min/argmin combining is exact (no rounding), and every g/h expression
+matches the jnp structured path term-for-term, so the kernel's outputs
+are bit-identical to `minplus_step_structured` — and to the dense oracle
+on monotone y_c inputs. Unlike the dense `minplus` kernel this one does
+O(N log N) work, so it exists for VMEM-residency (no per-table HBM
+round-trips), not arithmetic-intensity, reasons.
+
+The i axis is padded to a multiple of 128 for lane alignment: F pads with
+the large-positive sentinel (never wins a min) and the y_c vectors pad
+with their last value (preserves the monotonicity precondition).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dp import _first_min_pair as _first_min
+
+from .minplus import BLOCK, _PAD_HI
+
+
+def _prefix_min_scan(v, a, log_n: int, reverse: bool):
+    """Inclusive running (min, first-argmin) via log_n doubling rounds."""
+    n = v.shape[0]
+    inf = jnp.float32(jnp.inf)
+    for r in range(log_n):
+        h = 1 << r
+        if reverse:
+            sv = jnp.concatenate([v[h:], jnp.full((h,), inf, v.dtype)])
+            sa = jnp.concatenate([a[h:], jnp.full((h,), n, a.dtype)])
+        else:
+            sv = jnp.concatenate([jnp.full((h,), inf, v.dtype), v[:-h]])
+            sa = jnp.concatenate([jnp.full((h,), n, a.dtype), a[:-h]])
+        v, a = _first_min(v, a, sv, sa)
+    return v, a
+
+
+def _kernel(params_ref, f_ref, ycp_ref, ycc_ref, out_ref, arg_ref, *,
+            n_pad: int, log_n: int):
+    af = params_ref[0, 0]
+    df = params_ref[0, 1]
+    ac = params_ref[0, 2]
+    dc = params_ref[0, 3]
+
+    F = f_ref[0, :]
+    u = ycp_ref[0, :]                     # y_c of the source interval
+    v = ycc_ref[0, :]                     # y_c of the destination interval
+
+    i = jax.lax.broadcasted_iota(jnp.float32, (n_pad,), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (n_pad,), 0)
+    jf = i                                 # same values, float view
+    idx = j
+
+    # Crossing k(j) = |{i : u(i) > v(j)}| (u non-increasing): branchless
+    # binary search, log_n static rounds.
+    k = jnp.zeros((n_pad,), jnp.int32)
+    for r in reversed(range(log_n + 1)):
+        cand = k + (1 << r)
+        probe = jnp.take(u, jnp.minimum(cand - 1, n_pad - 1))
+        move = (cand <= n_pad) & (probe > v)
+        k = jnp.where(move, cand, k)
+    m1 = jnp.minimum(j, k)
+    m2 = jnp.maximum(j, k)
+
+    g1 = F - af * i + dc * u
+    g2 = F - af * i - ac * u
+    g3 = F + df * i + dc * u
+    g4 = F + df * i - ac * u
+    inf = jnp.float32(jnp.inf)
+
+    # Prefix [0, m1): exclusive running min of g1, read at m1.
+    pv, pa = _prefix_min_scan(g1, idx, log_n, reverse=False)
+    pv = jnp.take(jnp.concatenate([jnp.full((1,), inf), pv]), m1)
+    pa = jnp.take(jnp.concatenate([jnp.zeros((1,), jnp.int32), pa]), m1)
+    pv = pv + (af * jf - dc * v)
+
+    # Suffix [m2, N): exclusive-from-the-right running min of g4.
+    sv, sa = _prefix_min_scan(g4, idx, log_n, reverse=True)
+    sv = jnp.take(jnp.concatenate([sv, jnp.full((1,), inf)]), m2)
+    sa = jnp.take(jnp.concatenate([sa, jnp.zeros((1,), jnp.int32)]), m2)
+    sv = sv + (-df * jf + ac * v)
+
+    # Middle [m1, m2): doubling range-min tables of g2 / g3.
+    def table(g):
+        tv, ta = [g], [idx]
+        for r in range(1, log_n + 1):
+            h = 1 << (r - 1)
+            cv = jnp.concatenate([tv[-1][h:], jnp.full((h,), inf)])
+            ca = jnp.concatenate([ta[-1][h:], jnp.full((h,), n_pad,
+                                                       jnp.int32)])
+            nv, na = _first_min(tv[-1], ta[-1], cv, ca)
+            tv.append(nv)
+            ta.append(na)
+        return jnp.stack(tv).ravel(), jnp.stack(ta).ravel()
+
+    length = m2 - m1
+    s = jnp.floor(jnp.log2(jnp.maximum(length, 1).astype(jnp.float32)))
+    s = jnp.clip(s.astype(jnp.int32), 0, log_n)
+    r2 = jnp.maximum(m2 - jnp.left_shift(1, s), 0)
+
+    def query(g):
+        tv, ta = table(g)
+        v1, a1 = jnp.take(tv, s * n_pad + m1), jnp.take(ta, s * n_pad + m1)
+        v2, a2 = jnp.take(tv, s * n_pad + r2), jnp.take(ta, s * n_pad + r2)
+        qv, qa = _first_min(v1, a1, v2, a2)
+        return jnp.where(length <= 0, inf, qv), jnp.where(length <= 0, 0, qa)
+
+    mv2, ma2 = query(g2)
+    mv3, ma3 = query(g3)
+    use_g2 = k <= j
+    mv = jnp.where(use_g2, mv2 + (af * jf + ac * v),
+                   mv3 + (-df * jf - dc * v))
+    ma = jnp.where(use_g2, ma2, ma3)
+
+    # Combine in source-index order; strict < keeps the first minimizer.
+    bv, ba = pv, pa
+    take = mv < bv
+    bv, ba = jnp.where(take, mv, bv), jnp.where(take, ma, ba)
+    take = sv < bv
+    bv, ba = jnp.where(take, sv, bv), jnp.where(take, sa, ba)
+    out_ref[0, :] = bv
+    arg_ref[0, :] = ba.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minplus_structured_pallas(F: jnp.ndarray, yc_prev: jnp.ndarray,
+                              yc_cur: jnp.ndarray, params: jnp.ndarray,
+                              interpret: bool = True):
+    """F, yc_prev, yc_cur: (N,) float32 with both y_c non-increasing;
+    params: (4,) [af, df, ac, dc]. Returns (out, argmin) like the oracle."""
+    n = F.shape[0]
+    n_pad = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    pad = n_pad - n
+    Fp = jnp.pad(F.astype(jnp.float32), (0, pad),
+                 constant_values=_PAD_HI)[None, :]
+    ycp = jnp.pad(yc_prev.astype(jnp.float32), (0, pad), mode="edge")[None, :]
+    ycc = jnp.pad(yc_cur.astype(jnp.float32), (0, pad), mode="edge")[None, :]
+    prm = params.astype(jnp.float32).reshape(1, 4)
+    log_n = max(1, (n_pad - 1).bit_length())
+
+    out, arg = pl.pallas_call(
+        functools.partial(_kernel, n_pad=n_pad, log_n=log_n),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda _: (0, 0)),          # params
+            pl.BlockSpec((1, n_pad), lambda _: (0, 0)),      # F
+            pl.BlockSpec((1, n_pad), lambda _: (0, 0)),      # yc_prev
+            pl.BlockSpec((1, n_pad), lambda _: (0, 0)),      # yc_cur
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_pad), lambda _: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda _: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(prm, Fp, ycp, ycc)
+    return out[0, :n], arg[0, :n]

@@ -105,6 +105,70 @@ def test_minplus_inside_dp_solver():
     np.testing.assert_array_equal(a.y_fpga, b.y_fpga)
 
 
+# ----------------------------------------------- minplus (structured)
+@pytest.mark.parametrize("n", [1, 8, 100, 128, 130, 257, 1024])
+def test_minplus_structured_kernel_matches_oracles(n):
+    """The scan-based structured kernel must be bit-identical to BOTH the
+    dense jnp oracle and the structured jnp path on monotone y_c inputs
+    (min/argmin combining has no rounding), including non-multiples of
+    the 128 lane block (edge-padded y_c, sentinel-padded F)."""
+    from repro.core.dp import minplus_step_jnp, minplus_step_structured
+    from repro.kernels.minplus.ops import (
+        minplus_step_structured as kernel_step,
+    )
+    rng = np.random.default_rng(n * 13 + 5)
+    F = jnp.asarray(rng.integers(-1000, 1000, n).astype(np.float32))
+    ycp = jnp.asarray(np.sort(rng.integers(0, 50, n))[::-1]
+                      .astype(np.float32))
+    ycc = jnp.asarray(np.sort(rng.integers(0, 50, n))[::-1]
+                      .astype(np.float32))
+    coeffs = (500.0, 5.0, 3.0, 2.0)
+    want_v, want_a = minplus_step_jnp(F, ycp, ycc, coeffs)
+    ref_v, ref_a = minplus_step_structured(F, ycp, ycc, coeffs)
+    got_v, got_a = kernel_step(F, ycp, ycc, coeffs)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(ref_a))
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 300))
+@settings(max_examples=15, deadline=None)
+def test_minplus_structured_kernel_property(seed, n):
+    from repro.core.dp import minplus_step_jnp
+    from repro.kernels.minplus.ops import (
+        minplus_step_structured as kernel_step,
+    )
+    rng = np.random.default_rng(seed)
+    F = jnp.asarray(rng.integers(-500, 500, n).astype(np.float32))
+    ycp = jnp.asarray(np.sort(rng.integers(0, 8, n))[::-1]
+                      .astype(np.float32))
+    ycc = jnp.asarray(np.sort(rng.integers(0, 8, n))[::-1]
+                      .astype(np.float32))
+    coeffs = tuple(float(x) for x in rng.integers(0, 16, 4))
+    want_v, want_a = minplus_step_jnp(F, ycp, ycc, coeffs)
+    got_v, got_a = kernel_step(F, ycp, ycc, coeffs)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
+def test_minplus_structured_kernel_tie_breaking():
+    """First-minimizer rule through the kernel path under heavy ties."""
+    from repro.core.dp import minplus_step_jnp
+    from repro.kernels.minplus.ops import (
+        minplus_step_structured as kernel_step,
+    )
+    n = 130
+    rng = np.random.default_rng(n)
+    F = jnp.asarray(rng.integers(0, 3, n).astype(np.float32))
+    z = jnp.zeros((n,), jnp.float32)
+    coeffs = (0.0, 0.0, 0.0, 0.0)
+    want_v, want_a = minplus_step_jnp(F, z, z, coeffs)
+    got_v, got_a = kernel_step(F, z, z, coeffs)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
 # ---------------------------------------------------------- spork_predict
 @pytest.mark.parametrize("n", [16, 128, 200, 512])
 def test_spork_predict_matches_ref(n):
