@@ -53,6 +53,24 @@ def emit(name: str, rows: list[dict], t0: float) -> None:
 HISTORY_CAP = 50
 
 
+def _load_sweep() -> dict:
+    try:
+        with open(SWEEP_JSON) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_sweep(data: dict) -> None:
+    try:
+        os.makedirs(os.path.dirname(SWEEP_JSON), exist_ok=True)
+        with open(SWEEP_JSON, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+    except OSError:         # pragma: no cover — read-only results dir
+        pass
+
+
 def record_sweep(name: str, wall_s: float, n_rows: int) -> None:
     """Merge one suite's timing into BENCH_sweep.json (best effort).
 
@@ -60,11 +78,7 @@ def record_sweep(name: str, wall_s: float, n_rows: int) -> None:
     reads); ``history`` appends one `{wall_s, rows, fast}` entry per run
     (capped at the trailing HISTORY_CAP) so the file records a perf
     trajectory across PRs instead of overwriting it."""
-    try:
-        with open(SWEEP_JSON) as f:
-            data = json.load(f)
-    except (OSError, ValueError):
-        data = {}
+    data = _load_sweep()
     entry = {"wall_s": round(wall_s, 3), "rows": n_rows, "fast": FAST}
     prev = data.get(name) or {}
     history = list(prev.get("history", []))
@@ -73,13 +87,15 @@ def record_sweep(name: str, wall_s: float, n_rows: int) -> None:
                         if k in prev})
     history = (history + [entry])[-HISTORY_CAP:]
     data[name] = {**entry, "history": history}
-    try:
-        os.makedirs(os.path.dirname(SWEEP_JSON), exist_ok=True)
-        with open(SWEEP_JSON, "w") as f:
-            json.dump(data, f, indent=2, sort_keys=True)
-            f.write("\n")
-    except OSError:         # pragma: no cover — read-only results dir
-        pass
+    _save_sweep(data)
+
+
+def record_kv(name: str, **fields) -> None:
+    """Merge an arbitrary record (e.g. an engine-comparison entry) into
+    BENCH_sweep.json under ``name`` (best effort, like `record_sweep`)."""
+    data = _load_sweep()
+    data[name] = fields
+    _save_sweep(data)
 
 
 def timed(fn):

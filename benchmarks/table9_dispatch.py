@@ -3,50 +3,151 @@
 Exact event-driven simulation (per-request semantics are what separate
 the policies); production stand-ins at reduced demand so the DES stays
 tractable (utilization-preserving; documented in DESIGN.md §9).
+
+Two interchangeable engines (``engine=`` / ``BENCH_TABLE9_ENGINE``):
+
+  * ``python``  — the serial `repro.sim.events.EventSim` oracle, one run
+                  per (case, app, policy) cell. The tested ground truth.
+  * ``batched`` — `repro.sim.sweep.sweep_events` over the vectorized
+                  `repro.sim.events_batched` engine: the whole grid in a
+                  handful of vmapped `lax.scan` dispatches. Matches the
+                  oracle exactly on integer-quantized traces and to ~1%
+                  on these continuous ones (docs/architecture.md).
+
+``python`` is the fast-mode default: on few-core CPU hosts the oracle's
+C-level heapq beats XLA's per-primitive scan overhead (the batched
+engine's per-event cost is lane-parallel, which pays off on wide/many-
+core or accelerator backends, not on a 2-core container — measured
+numbers in results/BENCH_sweep.json under ``table9_engine_compare``).
+Run ``python benchmarks/table9_dispatch.py --compare`` to re-measure
+both engines and refresh that record.
 """
 
 from __future__ import annotations
+
+import os
+import sys
+
+# allow `python benchmarks/table9_dispatch.py --compare` from anywhere
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 from repro.core.metrics import RunTotals, report
 from repro.core.traces import synthetic_trace
 from repro.core.workers import DEFAULT_FLEET
 from repro.sim.events import simulate_events
+from repro.sim.sweep import EventCell, sweep_events
 
 from benchmarks.common import FAST
 
+# Demand in these grids peaks well below 128 FPGA-equivalents, so both
+# engines agree with the n_max=512 default bit-for-bit while the batched
+# engine's histogram state stays small.
+N_MAX = 128
 
-def run() -> list[dict]:
-    fleet = DEFAULT_FLEET
+CASES = [("azure-like(short)", 0.68, 0.05),
+         ("azure-like(medium)", 0.68, 0.3),
+         ("alibaba-like(short)", 0.58, 0.05)]
+
+DISPATCHERS = ("round_robin", "index_packing", "spork")
+
+
+def _grid():
+    """(label, [(arrival_times, size_s), ...]) per case; traces are
+    dispatch-policy-independent so they are generated once per (case,
+    app) and shared across all three policies and both engines."""
     horizon = 900 if FAST else 3600
     n_apps = 2 if FAST else 5
-    rows = []
-    cases = [("azure-like(short)", 0.68, 0.05),
-             ("azure-like(medium)", 0.68, 0.3),
-             ("alibaba-like(short)", 0.58, 0.05)]
-    for label, bias, size in cases:
-        # Traces and arrival times are dispatch-policy-independent:
-        # generate once per (case, app) and reuse across all three
-        # policies instead of regenerating inside the dispatcher loop.
+    grid = []
+    for label, bias, size in CASES:
         apps = []
         for app in range(n_apps):
             tr = synthetic_trace(seed=100 + app, bias=bias,
                                  horizon_s=horizon, request_size_s=size,
                                  mean_demand_workers=8.0)
             apps.append((tr.arrival_times(seed=7 + app), tr.request_size_s))
-        for disp in ("round_robin", "index_packing", "spork"):
-            total = RunTotals()
-            for arr, size_s in apps:
-                tot = simulate_events(arr, size_s, fleet,
-                                      dispatcher=disp, horizon_s=horizon)
-                total = total.merge(tot)
-            r = report(total, fleet)
+        grid.append((label, apps))
+    return grid, horizon
+
+
+def run(engine: str | None = None) -> list[dict]:
+    engine = engine or os.environ.get("BENCH_TABLE9_ENGINE", "python")
+    assert engine in ("python", "batched"), engine
+    fleet = DEFAULT_FLEET
+    grid, horizon = _grid()
+
+    merged: dict[tuple, RunTotals] = {}
+    if engine == "batched":
+        cells = [EventCell(disp, arr, size_s, fleet, horizon_s=horizon,
+                           tag=(label, disp))
+                 for label, apps in grid
+                 for disp in DISPATCHERS
+                 for arr, size_s in apps]
+        totals = sweep_events(cells, n_max=N_MAX)
+        for cell, tot in zip(cells, totals):
+            assert tot.breakdown.get("slot_overflow", 0) == 0
+            prev = merged.get(cell.tag)
+            merged[cell.tag] = tot if prev is None else prev.merge(tot)
+    else:
+        for label, apps in grid:
+            for disp in DISPATCHERS:
+                total = RunTotals()
+                for arr, size_s in apps:
+                    tot = simulate_events(arr, size_s, fleet,
+                                          dispatcher=disp,
+                                          horizon_s=horizon, n_max=N_MAX)
+                    total = total.merge(tot)
+                merged[(label, disp)] = total
+
+    rows = []
+    for label, _ in grid:
+        for disp in DISPATCHERS:
+            r = report(merged[(label, disp)], fleet)
             rows.append({"trace": label, "dispatch": disp,
+                         "engine": engine,
                          "energy_eff": round(r.energy_efficiency, 4),
                          "rel_cost": round(r.relative_cost, 4),
                          "miss_rate": round(r.deadline_miss_rate, 6)})
     return rows
 
 
+def compare() -> list[dict]:
+    """Run both engines on the identical grid, record walls + ratio in
+    results/BENCH_sweep.json (``table9_engine_compare``)."""
+    import time
+
+    from benchmarks.common import record_kv
+
+    run("batched")                       # compile outside the timed runs
+    run("python")                        # (predictor jit, symmetric)
+    t0 = time.time()
+    rows_b = run("batched")
+    wall_b = time.time() - t0
+    t0 = time.time()
+    rows_p = run("python")
+    wall_p = time.time() - t0
+    grid, _ = _grid()
+    record_kv("table9_engine_compare",
+              python_wall_s=round(wall_p, 3),
+              batched_wall_s=round(wall_b, 3),
+              batched_speedup=round(wall_p / wall_b, 3),
+              cells=len(DISPATCHERS) * sum(len(apps) for _, apps in grid),
+              fast=FAST)
+    print(f"python={wall_p:.1f}s batched={wall_b:.1f}s "
+          f"speedup={wall_p / wall_b:.2f}x")
+    for a, b in zip(rows_p, rows_b):
+        drift = abs(a["energy_eff"] - b["energy_eff"])
+        print(f"{a['trace']:22s} {a['dispatch']:14s} "
+              f"eff {a['energy_eff']:.4f}/{b['energy_eff']:.4f} "
+              f"(drift {drift:.4f})")
+    return rows_p
+
+
 if __name__ == "__main__":
-    for row in run():
-        print(row)
+    if "--compare" in sys.argv:
+        compare()
+    else:
+        for row in run():
+            print(row)

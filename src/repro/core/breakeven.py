@@ -79,6 +79,26 @@ class ObjectiveCoeffs(NamedTuple):
                                self.amort_unit + other.amort_unit)
 
 
+def objective_setup(fleet: FleetParams,
+                    energy_weight: float) -> tuple[float, ObjectiveCoeffs]:
+    """(breakeven threshold T_b, Alg.-2 coefficients) for one objective mix.
+
+    The single host-side source of truth shared by both event-driven
+    engines (`sim.events.EventSim` and `sim.events_batched`): weight 1.0
+    selects the energy objective, 0.0 the cost objective, anything in
+    between the scale-free weighted mix. T_b is clamped to one scheduling
+    interval (a request can never buy more than T_s of FPGA time).
+    """
+    if energy_weight >= 1.0:
+        tb, coeffs = energy_breakeven_s(fleet), energy_coeffs(fleet)
+    elif energy_weight <= 0.0:
+        tb, coeffs = cost_breakeven_s(fleet), cost_coeffs(fleet)
+    else:
+        tb = weighted_breakeven_s(fleet, energy_weight)
+        coeffs = weighted_coeffs(fleet, energy_weight)
+    return min(tb, fleet.T_s), coeffs
+
+
 def energy_coeffs(fleet: FleetParams) -> ObjectiveCoeffs:
     T = fleet.T_s
     return ObjectiveCoeffs(

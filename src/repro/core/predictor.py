@@ -133,6 +133,96 @@ def predict_jnp(H: jnp.ndarray, life_sum: jnp.ndarray, life_cnt: jnp.ndarray,
     return jnp.where(empty, n_prev.astype(jnp.int32), best)
 
 
+def allocator_tick_jnp(H: jnp.ndarray, life_sum: jnp.ndarray,
+                       life_cnt: jnp.ndarray, n_lag: jnp.ndarray,
+                       lam: jnp.ndarray, n_curr: jnp.ndarray,
+                       coeffs: ObjectiveCoeffs, interval_s, tb,
+                       gate=True) -> tuple[jnp.ndarray, jnp.ndarray,
+                                           jnp.ndarray]:
+    """One complete Alg. 1+2 allocator tick, in-graph.
+
+    Folds NeededFPGAs (floor + breakeven rounding on the observed interval
+    load ``lam``, in FPGA-seconds), the histogram observation
+    ``H[n_lag2, n_needed] += 1``, the lag shift, and `predict_jnp` into a
+    single jittable step. This is the batched tick entry point used by the
+    vectorized event-driven engine (`repro.sim.events_batched`): vmapping
+    it over a leading cell axis runs every simulation's allocator decision
+    for the interval in one dispatch. Semantics match the stateful
+    `Predictor` + the EventSim tick loop exactly (same clamps, same
+    empty-histogram fallback).
+
+    Returns ``(H, n_lag, target)`` — the updated histogram/lag state and
+    the allocation target n_{t+1}. ``gate`` (traced bool) makes the whole
+    tick a no-op on the H/n_lag state while still computing a (discarded)
+    target — the batched engine runs one gated tick per stream entry, and
+    gating the scatter-add value (instead of `where`-selecting between
+    two H buffers) keeps the histogram update in place.
+    """
+    n_max = H.shape[0]
+    n = jnp.floor(lam / interval_s)
+    frac = lam - n * interval_s
+    n_needed = jnp.minimum((n + (frac > tb)).astype(jnp.int32), n_max - 1)
+    H = H.at[jnp.minimum(n_lag[1], n_max - 1), n_needed].add(
+        jnp.where(gate, 1.0, 0.0))
+    n_lag = jnp.where(gate, jnp.stack([n_needed, n_lag[0]]), n_lag)
+    target = predict_jnp(H, life_sum, life_cnt, n_needed, n_curr, coeffs,
+                         interval_s)
+    return H, n_lag, target
+
+
+def lifetime_update_from_rings(alloc_time: jnp.ndarray,
+                               life_sum: jnp.ndarray, life_cnt: jnp.ndarray,
+                               young_ring: jnp.ndarray,
+                               dealloc_ring: jnp.ndarray, up_end: jnp.ndarray,
+                               t_end: jnp.ndarray
+                               ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """Replay one interval's worth of per-second pool changes into the
+    per-level lifetime statistics, in one vectorized pass.
+
+    The rate simulator allocates FPGA slots as a stack: completions push
+    levels ``[u, u+c)`` at the top, idle reclaim pops ``[u-d, u)``. The
+    per-second scan therefore only needs to record the push/pop COUNTS
+    (``young_ring``/``dealloc_ring``, one int per second) — this replay,
+    run once per allocation tick, reconstructs which levels were pushed
+    and popped each second and applies the exact same updates the old
+    per-second code made:
+
+        alloc_time[i] = last second that pushed level i
+        life_sum[i]  += (pop second) - (matching push second)  per pop
+        life_cnt[i]  += 1                                      per pop
+
+    All quantities are small integers in float32, so the replay is
+    bit-identical to the retired per-second updates. ``t_end`` is the
+    tick time (seconds); ring slot s corresponds to absolute second
+    ``t_end - S + s`` because ticks land on interval boundaries.
+    """
+    S = young_ring.shape[0]
+    n = alloc_time.shape[0]
+    c = young_ring.astype(jnp.int32)
+    d = dealloc_ring.astype(jnp.int32)
+    delta = c - d
+    pre = jnp.cumsum(delta)
+    u_after = up_end - (pre[-1] - pre)              # up after second s
+    u_before = u_after - delta                      # up entering second s
+    top = u_before + c                              # up after completions
+    lvl = jnp.arange(n)
+    pushed = (lvl[None, :] >= u_before[:, None]) & (lvl[None, :] < top[:, None])
+    popped = (lvl[None, :] >= u_after[:, None]) & (lvl[None, :] < top[:, None])
+    t_s = (t_end - S + jnp.arange(S)).astype(jnp.float32)
+    push_t = jnp.where(pushed, t_s[:, None], -jnp.inf)
+    # alloc time in effect at second s = last push <= s, else the carried
+    # alloc_time (push times are monotone, so a running max is exact)
+    eff = jnp.maximum(jax.lax.cummax(push_t, axis=0), alloc_time[None, :])
+    life_sum = life_sum + jnp.sum(
+        jnp.where(popped, t_s[:, None] - eff, 0.0), axis=0)
+    life_cnt = life_cnt + jnp.sum(popped, axis=0).astype(jnp.float32)
+    return eff[-1], life_sum, life_cnt
+
+
+_predict_jit = jax.jit(predict_jnp)
+
+
 class Predictor:
     """Stateful NumPy twin for the event-driven simulator."""
 
@@ -153,8 +243,10 @@ class Predictor:
         self.life_cnt[level] += 1
 
     def predict(self, n_prev: int, n_curr: int) -> int:
+        # jitted (one compile per n_max): the per-tick predict is half the
+        # serial DES wall time when dispatched eagerly op-by-op
         n_prev = min(n_prev, self.n_max - 1)
-        out = predict_jnp(jnp.asarray(self.H), jnp.asarray(self.life_sum),
-                          jnp.asarray(self.life_cnt), jnp.asarray(n_prev),
-                          jnp.asarray(n_curr), self.coeffs, self.interval_s)
+        out = _predict_jit(jnp.asarray(self.H), jnp.asarray(self.life_sum),
+                           jnp.asarray(self.life_cnt), jnp.asarray(n_prev),
+                           jnp.asarray(n_curr), self.coeffs, self.interval_s)
         return int(out)

@@ -11,4 +11,10 @@ vmapped dispatch. The benchmark suites (Figs. 5-7, Table 8) run on it.
 
 `events` — exact discrete-event simulator (per-request semantics) used for
 dispatch-policy studies (paper Table 9) and as ground truth in tests.
+
+`events_batched` — the same per-request semantics as a fixed-shape JAX
+`lax.scan` over a worker state table, vmapped over (dispatcher x app x
+seed x objective) cells; `sweep.sweep_events` runs whole DES grids in a
+handful of dispatches. Equivalence contract vs the `events` oracle in
+docs/architecture.md.
 """

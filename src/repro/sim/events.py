@@ -29,9 +29,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.breakeven import (ObjectiveCoeffs, energy_breakeven_s,
-                                  cost_breakeven_s, weighted_breakeven_s,
-                                  energy_coeffs, cost_coeffs, weighted_coeffs)
+from repro.core.breakeven import objective_setup
 from repro.core.metrics import RunTotals
 from repro.core.predictor import Predictor
 from repro.core.workers import FleetParams
@@ -66,14 +64,7 @@ class EventSim:
         self.deadline = 10.0 * size_s if deadline_s is None else deadline_s
         self.dispatcher = dispatcher
         self.allocate_fpgas = allocate_fpgas
-        if energy_weight >= 1.0:
-            self.tb, coeffs = energy_breakeven_s(fleet), energy_coeffs(fleet)
-        elif energy_weight <= 0.0:
-            self.tb, coeffs = cost_breakeven_s(fleet), cost_coeffs(fleet)
-        else:
-            self.tb = weighted_breakeven_s(fleet, energy_weight)
-            coeffs = weighted_coeffs(fleet, energy_weight)
-        self.tb = min(self.tb, fleet.T_s)
+        self.tb, coeffs = objective_setup(fleet, energy_weight)
         self.predictor = Predictor(n_max, coeffs, fleet.T_s)
         self.n_max = n_max
 

@@ -52,7 +52,8 @@ import numpy as np
 
 from repro.core.breakeven import ObjectiveCoeffs
 from repro.core.metrics import RunTotals
-from repro.core.predictor import amortization_vector, expected_objective_jnp
+from repro.core.predictor import (allocator_tick_jnp,
+                                  lifetime_update_from_rings)
 from repro.core.workers import FleetParams
 
 POLICIES = ("spork", "spork_ideal", "cpu_dynamic", "fpga_static",
@@ -148,6 +149,7 @@ class SimState(NamedTuple):
     pending: jnp.ndarray          # (pending_max,) arriving in k seconds
     used_ring: jnp.ndarray        # (interval_s,) used FPGAs per past second
     young_ring: jnp.ndarray       # (interval_s,) spin-up completions per second
+    dealloc_ring: jnp.ndarray     # (interval_s,) idle reclaims per second
     alloc_time: jnp.ndarray       # (n_max,) per-slot alloc timestamps
     H: jnp.ndarray                # (n_max, n_max) conditional histograms
     life_sum: jnp.ndarray         # (n_max,)
@@ -170,18 +172,10 @@ def _second_step(policy: str, interval_s: int, spin_up_s: int, n_max: int,
     W = arrivals.astype(jnp.float32) * size_s           # CPU-seconds of demand
     acc = state.accum
 
-    track_life = policy in PREDICTOR_POLICIES
-
     # --- spin-up completions ---
     completions = state.pending[0]
     pending = jnp.concatenate([state.pending[1:], jnp.zeros((1,), jnp.int32)])
     up = state.up + completions
-    if track_life:
-        idx = jnp.arange(n_max)
-        alloc_time = jnp.where((idx >= state.up) & (idx < up),
-                               state.t.astype(jnp.float32), state.alloc_time)
-    else:
-        alloc_time = state.alloc_time
 
     # --- serving ---
     allow_cpu = policy in ("spork", "spork_ideal", "cpu_dynamic", "mark_ideal")
@@ -237,13 +231,12 @@ def _second_step(policy: str, interval_s: int, spin_up_s: int, n_max: int,
                                     used_f + headroom.astype(jnp.int32))
         dealloc = jnp.maximum(up - protected, 0)
     up_next = up - dealloc
-    if track_life:
-        dmask = (idx >= up_next) & (idx < up)
-        life_sum = state.life_sum + jnp.where(
-            dmask, state.t.astype(jnp.float32) - alloc_time, 0.0)
-        life_cnt = state.life_cnt + dmask.astype(jnp.float32)
-    else:
-        life_sum, life_cnt = state.life_sum, state.life_cnt
+    # Lifetime stats are NOT updated here: the per-second O(n_max)
+    # alloc_time/life_sum bookkeeping was retired in favor of the
+    # push/pop-count rings, replayed once per tick by
+    # `predictor.lifetime_update_from_rings` (the stats are only read at
+    # ticks, so deferring the update is exact).
+    dealloc_ring = state.dealloc_ring.at[state.t % interval_s].set(dealloc)
 
     # --- accounting ---
     upf = up.astype(jnp.float32)
@@ -268,9 +261,11 @@ def _second_step(policy: str, interval_s: int, spin_up_s: int, n_max: int,
     )
 
     return SimState(
-        up=up_next, pending=pending, used_ring=used_ring, young_ring=young_ring,
-        alloc_time=alloc_time, H=state.H, life_sum=life_sum, life_cnt=life_cnt,
-        n_lag=state.n_lag, F_acc=state.F_acc + busy_f, C_acc=state.C_acc + cpu_work,
+        up=up_next, pending=pending, used_ring=used_ring,
+        young_ring=young_ring, dealloc_ring=dealloc_ring,
+        alloc_time=state.alloc_time, H=state.H, life_sum=state.life_sum,
+        life_cnt=state.life_cnt, n_lag=state.n_lag,
+        F_acc=state.F_acc + busy_f, C_acc=state.C_acc + cpu_work,
         cpu_prev=cpu_alive if policy == "mark_ideal" else n_cpu,
         queue=queue, t=state.t + 1, accum=acc)
 
@@ -359,18 +354,22 @@ def _interval_tick(policy: str, interval_s: int, spin_up_s: int, n_max: int,
         target = jnp.minimum(next_true_needed, n_max - 1)
         H, n_lag = state.H, state.n_lag
     else:
+        # Fold the previous interval's per-second push/pop counts into
+        # the per-level lifetime stats (the stats are only read here, so
+        # replaying the rings at the tick is exact and keeps the
+        # per-second scan free of O(n_max) bookkeeping).
+        alloc_time, life_sum, life_cnt = lifetime_update_from_rings(
+            state.alloc_time, state.life_sum, state.life_cnt,
+            state.young_ring, state.dealloc_ring, state.up, state.t)
+        state = state._replace(alloc_time=alloc_time, life_sum=life_sum,
+                               life_cnt=life_cnt)
         lam = state.F_acc + state.C_acc / fs.S           # FPGA-seconds
-        n_needed = _needed_fpgas(lam, jnp.float32(interval_s), tb)
-        n_needed = jnp.minimum(n_needed, n_max - 1)
-        H = state.H.at[state.n_lag[1], n_needed].add(1.0)
-        n_lag = jnp.stack([n_needed, state.n_lag[0]])
-        hist = H[n_needed]
-        amort = amortization_vector(state.life_sum, state.life_cnt,
-                                    n_curr, jnp.float32(interval_s),
-                                    coeffs.amort_unit)
-        j = expected_objective_jnp(hist, coeffs, amort)
-        best = jnp.argmin(j).astype(jnp.int32)
-        target = jnp.where(jnp.sum(hist) <= 0, n_needed, best)
+        # one shared Alg. 1+2 tick (NeededFPGAs rounding + histogram
+        # observe + lag shift + predict) — same entry point the batched
+        # DES uses, so the two engines cannot drift
+        H, n_lag, target = allocator_tick_jnp(
+            state.H, life_sum, life_cnt, state.n_lag, lam, n_curr,
+            coeffs, jnp.float32(interval_s), tb)
 
     new = jnp.maximum(target - n_curr, 0)
     new = jnp.minimum(new, n_max - 1 - n_curr)
@@ -417,6 +416,7 @@ def _simulate_core(policy: str, interval_s: int, spin_up_s: int, n_max: int,
         up=init_up, pending=jnp.zeros((max(spin_up_s, 1) + 1,), jnp.int32),
         used_ring=jnp.zeros((interval_s,), jnp.int32),
         young_ring=jnp.zeros((interval_s,), jnp.int32),
+        dealloc_ring=jnp.zeros((interval_s,), jnp.int32),
         alloc_time=jnp.zeros((n_life,), jnp.float32),
         H=jnp.zeros((n_life, n_life), jnp.float32),
         life_sum=jnp.zeros((n_life,), jnp.float32),
@@ -434,12 +434,16 @@ def _simulate_core(policy: str, interval_s: int, spin_up_s: int, n_max: int,
             return _second_step(policy, interval_s, spin_up_s, n_max, fs,
                                 size_s, headroom, s, a), None
 
-        # The O(n_max^2) histogram is only touched at interval ticks; keep
-        # it out of the per-second scan carry so large vmapped sweeps
-        # don't shuttle it through every second.
-        H = st.H
-        st, _ = jax.lax.scan(sec_body, st._replace(H=jnp.zeros((1, 1))), cnts)
-        return st._replace(H=H), None
+        # The O(n_max^2) histogram and the O(n_max) lifetime arrays are
+        # only touched at interval ticks; keep them out of the per-second
+        # scan carry so large vmapped sweeps don't shuttle them through
+        # every second (the seconds record push/pop counts in the rings).
+        H, at_, ls, lc = st.H, st.alloc_time, st.life_sum, st.life_cnt
+        one = jnp.zeros((1,))
+        st, _ = jax.lax.scan(
+            sec_body, st._replace(H=jnp.zeros((1, 1)), alloc_time=one,
+                                  life_sum=one, life_cnt=one), cnts)
+        return st._replace(H=H, alloc_time=at_, life_sum=ls, life_cnt=lc), None
 
     state, _ = jax.lax.scan(interval_body, state,
                             (next_true, next_W, next2_W, counts))

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core.metrics import Report, RunTotals, report
 from repro.core.workers import FleetParams
+from repro.sim.events_batched import EventCell, simulate_events_batch
 from repro.sim.ratesim import (Accum, FleetScalars, POLICIES, PREDICTOR_POLICIES,
                                _simulate_cells, accum_to_totals,
                                headroom_unit, static_level_for)
@@ -194,6 +195,23 @@ def sweep(cells: Iterable[SweepCell], n_max: int | None = None) -> SweepResult:
                 out[dest] = np.asarray(leaf)[:got]
 
     return SweepResult(cells, Accum(*leaves), work, requests)
+
+
+def sweep_events(cells: Iterable[EventCell], n_max: int = 512,
+                 w_fpga: int = 32, w_cpu: int = 64) -> list[RunTotals]:
+    """Event-level (DES) cells in sweep grids.
+
+    The exact discrete-event counterpart of `sweep`: every `EventCell`
+    (dispatcher x arrival trace x fleet x objective) runs on the batched
+    `repro.sim.events_batched` engine, grouped by entry-stream shape and
+    vmapped, so a whole Table-9-style grid costs a handful of dispatches
+    instead of one serial `events.simulate_events` loop per cell. Cell
+    order is preserved; totals carry ``breakdown['slot_overflow']``
+    (always 0 when the worker-table regions are large enough — see the
+    engine's equivalence contract in docs/architecture.md).
+    """
+    return simulate_events_batch(cells, n_max=n_max, w_fpga=w_fpga,
+                                 w_cpu=w_cpu)
 
 
 def tune_fpga_dynamic_cells(cells: Iterable[SweepCell], max_k: int = 16,

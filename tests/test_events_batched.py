@@ -1,0 +1,191 @@
+"""Oracle equivalence of the batched event-driven engine.
+
+`repro.sim.events.EventSim` is ground truth; `repro.sim.events_batched`
+must reproduce it per the contract in its module docstring: on
+integer-quantized instances (times/sizes on a coarse dyadic grid, so
+float32 arithmetic is exact) every integer outcome — requests, deadline
+misses, spin-up counts, work split — matches EXACTLY, and energy/cost
+match to ~1e-5 relative (the oracle accumulates in float64).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.breakeven import energy_coeffs, objective_setup
+from repro.core.predictor import (Predictor, allocator_tick_jnp,
+                                  lifetime_update_from_rings)
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim.events import DISPATCHERS, simulate_events
+from repro.sim.events_batched import simulate_events_batched
+from repro.sim.sweep import EventCell, sweep_events
+
+# Quantized fleet: every timing parameter on the integer/dyadic grid
+# (CPU spin-up 1s instead of 5ms; all other defaults are already exact).
+QFLEET = DEFAULT_FLEET.replace(cpu=DEFAULT_FLEET.cpu.replace(spin_up_s=1.0))
+
+EXACT_FIELDS = ("requests", "deadline_misses", "fpga_spinups",
+                "cpu_spinups", "work_on_fpga_cpu_s", "work_on_cpu_cpu_s")
+CLOSE_FIELDS = ("energy_j", "cost_usd", "fpga_busy_j", "fpga_idle_j",
+                "cpu_busy_j", "spinup_j")
+
+HORIZON = 180
+
+
+def bursty_trace(seed: int, hi: float = 8.0) -> np.ndarray:
+    """Integer arrival times with alternating high/low rate blocks —
+    enough churn to exercise spin-up, idle reclaim and slot reuse."""
+    rng = np.random.default_rng(seed)
+    rates = np.where((np.arange(HORIZON) // 20) % 2 == 0, hi, 0.5)
+    counts = rng.poisson(rates)
+    return np.repeat(np.arange(HORIZON, dtype=np.float64), counts)
+
+
+def assert_engines_match(arr, size, disp, ew=1.0, deadline=None,
+                         allocate=True):
+    a = simulate_events(arr, size, QFLEET, dispatcher=disp,
+                        horizon_s=HORIZON, energy_weight=ew,
+                        deadline_s=deadline, allocate_fpgas=allocate,
+                        n_max=64)
+    b = simulate_events_batched(arr, size, QFLEET, dispatcher=disp,
+                                horizon_s=HORIZON, energy_weight=ew,
+                                deadline_s=deadline, allocate_fpgas=allocate,
+                                n_max=64, w_fpga=16, w_cpu=32)
+    assert b.breakdown["slot_overflow"] == 0
+    for f in EXACT_FIELDS:
+        assert getattr(a, f) == getattr(b, f), \
+            f"{f}: oracle={getattr(a, f)} batched={getattr(b, f)}"
+    for f in CLOSE_FIELDS:
+        np.testing.assert_allclose(getattr(b, f), getattr(a, f),
+                                   rtol=1e-5, atol=1e-3, err_msg=f)
+    return a, b
+
+
+@pytest.mark.parametrize("disp", DISPATCHERS)
+def test_oracle_equivalence_quantized(disp):
+    for seed in (0, 1, 2):
+        assert_engines_match(bursty_trace(seed), 1.0, disp)
+
+
+@pytest.mark.parametrize("disp", DISPATCHERS)
+def test_oracle_equivalence_dyadic_size(disp):
+    """size 0.5 → FPGA service 0.25: still exact in float32."""
+    assert_engines_match(bursty_trace(3), 0.5, disp)
+
+
+def test_oracle_equivalence_cost_objective():
+    assert_engines_match(bursty_trace(4), 1.0, "spork", ew=0.0)
+
+
+@pytest.mark.parametrize("disp", DISPATCHERS)
+def test_deadline_misses_match(disp):
+    """Tight deadline forces misses; the counts must agree exactly."""
+    a, _ = assert_engines_match(bursty_trace(5, hi=12.0), 1.0, disp,
+                                deadline=2.0)
+    assert a.requests > 0
+
+
+def test_no_fpga_allocation_path():
+    a, _ = assert_engines_match(bursty_trace(6), 1.0, "spork",
+                                allocate=False)
+    assert a.fpga_spinups == 0
+
+
+def test_vmapped_grid_smoke():
+    """A (dispatcher x seed) grid through sweep_events in one batch must
+    equal the per-cell oracle, and totals must line up cell-by-cell."""
+    cells = [EventCell(disp, bursty_trace(seed), 1.0, QFLEET,
+                       horizon_s=HORIZON, tag=(disp, seed))
+             for disp in DISPATCHERS for seed in (7, 8)]
+    got = sweep_events(cells, n_max=64, w_fpga=16, w_cpu=32)
+    assert len(got) == len(cells)
+    for cell, b in zip(cells, got):
+        assert b.breakdown["slot_overflow"] == 0
+        a = simulate_events(cell.arrival_times, cell.size_s, QFLEET,
+                            dispatcher=cell.dispatcher, horizon_s=HORIZON,
+                            n_max=64)
+        for f in EXACT_FIELDS:
+            assert getattr(a, f) == getattr(b, f), (cell.tag, f)
+        np.testing.assert_allclose(b.energy_j, a.energy_j, rtol=1e-5)
+
+
+def test_dispatch_policy_ordering_batched():
+    """Paper Table 9 ordering must survive the engine swap."""
+    from repro.core.metrics import report
+    arr = bursty_trace(9)
+    effs = {}
+    for disp in DISPATCHERS:
+        tot = simulate_events_batched(arr, 1.0, QFLEET, dispatcher=disp,
+                                      horizon_s=HORIZON, n_max=64,
+                                      w_fpga=16, w_cpu=32)
+        effs[disp] = report(tot, QFLEET).energy_efficiency
+    assert effs["spork"] >= effs["index_packing"] - 0.02
+    assert effs["index_packing"] > effs["round_robin"]
+
+
+def test_allocator_tick_matches_predictor():
+    """The in-graph tick (observe + lag shift + predict) must replay the
+    stateful Predictor sequence exactly."""
+    fleet = QFLEET
+    n_max = 32
+    tb, coeffs = objective_setup(fleet, 1.0)
+    p = Predictor(n_max, coeffs, fleet.T_s)
+    H = jnp.zeros((n_max, n_max), jnp.float32)
+    n_lag = jnp.zeros((2,), jnp.int32)
+    rng = np.random.default_rng(0)
+    n_lag_py = [0, 0]
+    for step in range(12):
+        lam = float(rng.uniform(0, 8 * fleet.T_s))
+        n_curr = int(rng.integers(0, 6))
+        # oracle sequence (EventSim._on_tick)
+        n = int(lam // fleet.T_s)
+        if lam - n * fleet.T_s > min(tb, fleet.T_s):
+            n += 1
+        n_needed = min(n, n_max - 1)
+        p.observe(n_lag_py[1], n_needed)
+        n_lag_py = [n_needed, n_lag_py[0]]
+        want = p.predict(n_needed, n_curr)
+        # in-graph tick
+        H, n_lag, target = allocator_tick_jnp(
+            H, jnp.zeros((n_max,)), jnp.zeros((n_max,)), n_lag,
+            jnp.float32(lam), jnp.int32(n_curr), coeffs,
+            jnp.float32(fleet.T_s), jnp.float32(min(tb, fleet.T_s)))
+        assert int(target) == want, step
+        assert list(np.asarray(n_lag)) == n_lag_py
+    np.testing.assert_array_equal(np.asarray(H), p.H)
+
+
+def test_lifetime_replay_matches_per_second_loop():
+    """`lifetime_update_from_rings` must reproduce the retired per-second
+    stack bookkeeping exactly (alloc times, closed-episode sums/counts)."""
+    rng = np.random.default_rng(1)
+    S, n = 10, 16
+    for trial in range(20):
+        alloc0 = rng.integers(0, 50, n).astype(np.float64)
+        life_sum0 = rng.integers(0, 100, n).astype(np.float64)
+        life_cnt0 = rng.integers(0, 5, n).astype(np.float64)
+        u = int(rng.integers(0, 6))
+        t0 = 60 + trial * S
+        c = np.zeros(S, int)
+        d = np.zeros(S, int)
+        # reference: literal per-second push/pop loop
+        at, ls, lc = alloc0.copy(), life_sum0.copy(), life_cnt0.copy()
+        for s in range(S):
+            cs = int(rng.integers(0, 3))
+            at[u:u + cs] = t0 + s
+            u += cs
+            ds = int(rng.integers(0, min(u, 3) + 1))
+            for i in range(u - ds, u):
+                ls[i] += (t0 + s) - at[i]
+                lc[i] += 1
+            u -= ds
+            c[s], d[s] = cs, ds
+        got_at, got_ls, got_lc = lifetime_update_from_rings(
+            jnp.asarray(alloc0, jnp.float32), jnp.asarray(life_sum0,
+                                                          jnp.float32),
+            jnp.asarray(life_cnt0, jnp.float32), jnp.asarray(c, jnp.int32),
+            jnp.asarray(d, jnp.int32), jnp.int32(u), jnp.int32(t0 + S))
+        np.testing.assert_array_equal(np.asarray(got_at), at)
+        np.testing.assert_array_equal(np.asarray(got_ls), ls)
+        np.testing.assert_array_equal(np.asarray(got_lc), lc)

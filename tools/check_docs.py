@@ -1,0 +1,123 @@
+"""Docs link/reference checker (CI step; also runnable locally).
+
+Validates that the documentation layer stays tethered to the code:
+
+  1. every relative markdown link in README.md, docs/*.md and
+     benchmarks/README.md resolves to an existing file/dir;
+  2. every `repro...`-style module reference (dotted or path form) and
+     every `benchmarks/*.py` / `tests/*.py` / `tools/*.py` /
+     `examples/*.py` / `results/*.json` path mentioned in docs/*.md and
+     README.md resolves under the repo;
+  3. `path.py::test_name`-style test references name real tests;
+  4. dotted references with a trailing attribute (e.g.
+     `repro.sim.sweep.sweep_events`) have the attribute defined in the
+     resolved module.
+
+Usage: python tools/check_docs.py   (exit 1 on any broken reference)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md", "benchmarks/README.md"]
+DOC_FILES += sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(ROOT, "docs"))
+    if f.endswith(".md")) if os.path.isdir(os.path.join(ROOT, "docs")) else []
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# dotted: repro.core.dp / repro.sim.sweep.sweep_events
+DOTTED_RE = re.compile(r"\brepro(?:\.\w+)+\b")
+# path-ish: repro/sim/events.py, benchmarks/fig2_pareto.py, results/x.json
+PATH_RE = re.compile(
+    r"\b((?:repro|benchmarks|tests|tools|examples|results)"
+    r"/[\w./-]+?\.(?:py|json|md))\b")
+TESTREF_RE = re.compile(r"\b(tests/[\w/]+\.py)::(\w+)")
+
+
+def fail(errors: list[str], msg: str) -> None:
+    errors.append(msg)
+
+
+def check_links(path: str, text: str, errors: list[str]) -> None:
+    base = os.path.dirname(os.path.join(ROOT, path))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+            fail(errors, f"{path}: broken link -> {target}")
+
+
+def resolve_dotted(ref: str) -> tuple[str | None, list[str]]:
+    """Longest module prefix of a dotted ref -> (file-or-pkg path,
+    leftover attribute parts)."""
+    parts = ref.split(".")
+    for k in range(len(parts), 0, -1):
+        stem = os.path.join(ROOT, "src", *parts[:k])
+        if os.path.isfile(stem + ".py"):
+            return stem + ".py", parts[k:]
+        if os.path.isdir(stem):
+            return stem, parts[k:]
+    return None, parts
+
+
+def check_dotted(path: str, text: str, errors: list[str]) -> None:
+    for ref in sorted(set(DOTTED_RE.findall(text))):
+        mod, attrs = resolve_dotted(ref)
+        if mod is None:
+            fail(errors, f"{path}: unresolvable module reference {ref}")
+            continue
+        if len(attrs) > 1:
+            fail(errors, f"{path}: {ref} leaves {'.'.join(attrs)} "
+                         f"unresolved under {os.path.relpath(mod, ROOT)}")
+        elif len(attrs) == 1:
+            # last component may be an attribute: require the name to at
+            # least appear in the resolved module (catches renames)
+            src_file = mod if os.path.isfile(mod) else os.path.join(
+                mod, "__init__.py")
+            src = open(src_file).read() if os.path.isfile(src_file) else ""
+            if not re.search(rf"\b{re.escape(attrs[0])}\b", src):
+                fail(errors, f"{path}: {ref}: no '{attrs[0]}' in "
+                             f"{os.path.relpath(src_file, ROOT)}")
+
+
+def check_paths(path: str, text: str, errors: list[str]) -> None:
+    for ref in sorted(set(PATH_RE.findall(text))):
+        cand = ref if not ref.startswith("repro/") else "src/" + ref
+        if not os.path.exists(os.path.join(ROOT, cand)):
+            fail(errors, f"{path}: missing path reference {ref}")
+    for ref, test in sorted(set(TESTREF_RE.findall(text))):
+        fp = os.path.join(ROOT, ref)
+        if not os.path.isfile(fp):
+            fail(errors, f"{path}: missing test file {ref}")
+        elif f"def {test}" not in open(fp).read():
+            fail(errors, f"{path}: {ref} has no test named {test}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    for path in DOC_FILES:
+        full = os.path.join(ROOT, path)
+        if not os.path.isfile(full):
+            fail(errors, f"missing doc file {path}")
+            continue
+        text = open(full).read()
+        check_links(path, text, errors)
+        check_dotted(path, text, errors)
+        check_paths(path, text, errors)
+    for e in errors:
+        print(f"check_docs: {e}")
+    print(f"check_docs: {len(DOC_FILES)} files, "
+          f"{'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
