@@ -1,0 +1,113 @@
+"""Scenario suite: the full workload library x dispatch policies.
+
+The workload-diversity benchmark the ROADMAP's "opens a new workload"
+north star asks for: every named scenario in `repro.workloads.registry`
+(steady, diurnal, flash-crowd, bursty-short, heavy-tail-mix,
+azure-like, alibaba-like, csv-replay) runs against three scheduling
+policies over a seed batch, entirely through the batched engines:
+
+  * trace synthesis: ONE device dispatch per scenario
+    (`repro.workloads.scenarios.realize` — rates, Poisson counts and
+    request sizes fused into one vmapped program);
+  * simulation: the whole scenario x policy x seed grid as
+    scenario-bearing `SweepCell`s through `repro.sim.sweep` — one
+    dispatch per policy group (<= 3 total; asserted, and recorded in
+    results/BENCH_sweep.json under ``scenario_suite_meta``);
+  * validation: every synthetic scenario's realized batch must pass its
+    `repro.workloads.stats` validator ranges (asserted — a generator
+    whose shape drifts fails the suite, not just a test).
+
+Fast mode: 1800 s horizon x 4 seeds (the sweep programs warmed by
+benchmarks/warmup.py are reused). Full mode: 7200 s x 10 seeds.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# allow `python benchmarks/scenario_suite.py` from anywhere
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import numpy as np
+
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim.sweep import SweepCell, sweep
+from repro.workloads import registry, stats
+from repro.workloads.scenarios import realize
+
+from benchmarks.common import FAST, fast_params, record_kv
+
+POLICIES = [("SporkE", "spork", 1.0), ("CPU-dynamic", "cpu_dynamic", 1.0),
+            ("FPGA-static", "fpga_static", 1.0)]
+
+# One dispatch per policy-group chunk: fast mode (8 scenarios x 4 seeds =
+# 32 cells/policy) fits each policy in exactly one chunk -> 3 dispatches.
+# Full mode (10 seeds -> 80 cells/policy) splits the Spork group (its
+# predictor state pins the small chunk width) into ceil(80/32) = 3.
+MAX_SWEEP_DISPATCHES = 3 if FAST else 5
+
+
+def run() -> list[dict]:
+    import repro.workloads.scenarios as _sc
+    _, horizon, _ = fast_params()
+    n_seeds = 4 if FAST else 10
+    seeds = tuple(range(n_seeds))
+    fleet = DEFAULT_FLEET
+
+    specs = [registry.get(name).with_(horizon_s=horizon)
+             for name in registry.names()]
+
+    # Realize + validate every scenario (one synthesis dispatch each; the
+    # sweep resolver below hits the same cache, so it costs no more).
+    scen_meta: dict[str, dict] = {}
+    cells = []
+    for spec in specs:
+        synth0 = _sc.SYNTH_DISPATCHES
+        batch = realize(spec, seeds)
+        ok, st, failures = stats.validate(spec, batch.rates)
+        assert ok, f"scenario validator failed: {failures}"
+        scen_meta[spec.name] = {
+            "synth_dispatches": _sc.SYNTH_DISPATCHES - synth0,
+            **{k: round(v, 4) for k, v in st.items()}}
+        cells.extend(
+            SweepCell(policy, fleet=fleet, scenario=spec, seed=s,
+                      energy_weight=ew, tag=(spec.name, label))
+            for label, policy, ew in POLICIES for s in seeds)
+
+    res = sweep(cells)
+    assert res.n_dispatches <= MAX_SWEEP_DISPATCHES, (
+        f"scenario grid took {res.n_dispatches} sweep dispatches "
+        f"(> {MAX_SWEEP_DISPATCHES}) — did the policy grouping change?")
+
+    acc: dict[tuple, list] = {}
+    for i, cell in enumerate(res.cells):
+        r = res.report(i)
+        acc.setdefault(cell.tag, []).append(
+            (r.energy_efficiency, r.relative_cost, r.deadline_miss_rate))
+
+    rows = []
+    for spec in specs:
+        for label, _, _ in POLICIES:
+            vals = acc[(spec.name, label)]
+            rows.append({
+                "scenario": spec.name, "scheduler": label,
+                "energy_eff": round(float(np.mean([v[0] for v in vals])), 4),
+                "rel_cost": round(float(np.mean([v[1] for v in vals])), 4),
+                "miss_rate": round(float(np.mean([v[2] for v in vals])), 6),
+                "b_est": scen_meta[spec.name]["bias_est"],
+                "peak_to_mean": scen_meta[spec.name]["peak_to_mean"]})
+
+    record_kv("scenario_suite_meta",
+              scenarios=scen_meta, n_seeds=n_seeds, horizon_s=horizon,
+              sweep_dispatches=res.n_dispatches,
+              sweep_cells=len(res), fast=FAST)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -74,7 +74,7 @@ class ModelConfig:
     q_block: int = 512
     # FSDP parameter storage for TRAINING (fan-in over data axes); only
     # for configs whose params exceed TP-only HBM. Serving is always
-    # TP/EP-only. See distributed.sharding.set_fsdp + EXPERIMENTS §Perf.
+    # TP/EP-only. See distributed.sharding.set_fsdp + EXPERIMENTS.md §Perf.
     fsdp_train: bool = False
 
     def __post_init__(self):

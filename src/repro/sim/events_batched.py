@@ -74,7 +74,7 @@ import jax.numpy as jnp
 from repro.core.breakeven import objective_setup
 from repro.core.metrics import RunTotals
 from repro.core.predictor import ObjectiveCoeffs, allocator_tick_jnp
-from repro.core.workers import FleetParams
+from repro.core.workers import DEFAULT_FLEET, FleetParams
 from repro.sim.events import DISPATCHERS
 from repro.sim.ratesim import Accum, accum_to_totals
 
@@ -438,17 +438,25 @@ def _scalars(cell: "EventCell") -> tuple:
 
 @dataclass(frozen=True)
 class EventCell:
-    """One DES grid cell: one app trace under one dispatch policy."""
+    """One DES grid cell: one app trace under one dispatch policy.
+
+    Like `repro.sim.sweep.SweepCell`, demand is either explicit
+    (``arrival_times`` + ``size_s``) or named: ``scenario=spec, seed=k``
+    with ``arrival_times=None`` — `sweep.sweep_events` synthesizes the
+    arrival stream from the `repro.workloads` scenario library before
+    dispatch."""
 
     dispatcher: str
-    arrival_times: np.ndarray
-    size_s: float
-    fleet: FleetParams
+    arrival_times: np.ndarray | None = None
+    size_s: float | None = None
+    fleet: FleetParams = DEFAULT_FLEET
     energy_weight: float = 1.0
     horizon_s: float | None = None
     deadline_s: float | None = None
     allocate_fpgas: bool = True
     tag: Any = None
+    scenario: Any = None          # repro.workloads.ScenarioSpec | None
+    seed: int = 0                 # scenario realization seed
 
 
 def _entries(arr: np.ndarray, interval_s: float,
@@ -489,6 +497,11 @@ def simulate_events_batch(cells: Iterable[EventCell], n_max: int = 512,
     for cl in cells:
         if cl.dispatcher not in DISPATCH_CODES:
             raise ValueError(f"unknown dispatcher {cl.dispatcher!r}")
+        if cl.arrival_times is None or cl.size_s is None:
+            raise ValueError(
+                "EventCell without explicit demand (arrival_times + "
+                "size_s); scenario-bearing cells must go through "
+                "repro.sim.sweep.sweep_events, which resolves them")
     entries: dict[int, list] = {}
     groups: dict[int, list[int]] = {}
     for i, cl in enumerate(cells):

@@ -22,6 +22,12 @@ module batches the grid instead:
     benchmark scale.
   * `tune_fpga_dynamic_cells` expands cells into all headroom levels and
     selects per cell, batching the paper's §5.1 headroom tuning loop.
+  * Cells may name their demand instead of carrying it: a `SweepCell`
+    (or `EventCell`) with ``scenario=ScenarioSpec(...), seed=k`` and no
+    explicit counts/arrival stream is resolved by `resolve_scenarios`
+    against the `repro.workloads` scenario library — one batched
+    synthesis dispatch per distinct spec — before grouping, so
+    scenario x policy x seed grids are first-class sweep axes.
 
 Equivalence: per-cell totals match per-call `ratesim.simulate` at the
 same `n_max` to float32 tolerance (tests/test_sweep.py).
@@ -38,7 +44,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.metrics import Report, RunTotals, report
-from repro.core.workers import FleetParams
+from repro.core.workers import DEFAULT_FLEET, FleetParams
 from repro.sim.events_batched import EventCell, simulate_events_batch
 from repro.sim.ratesim import (Accum, FleetScalars, POLICIES, PREDICTOR_POLICIES,
                                _simulate_cells, accum_to_totals,
@@ -58,15 +64,25 @@ _N_MAX_CAP = 512
 
 @dataclass(frozen=True)
 class SweepCell:
-    """One grid cell of a parameter sweep."""
+    """One grid cell of a parameter sweep.
+
+    Demand comes either from explicit per-second ``counts`` (+ a scalar
+    ``size_s``) or from a named workload scenario: pass
+    ``scenario=ScenarioSpec(...), seed=k`` (`repro.workloads`) and leave
+    ``counts`` as None — `sweep` synthesizes every scenario-bearing
+    cell's counts (and, if ``size_s`` is None, its request size) in one
+    batched device dispatch per spec before grouping, so scenario x
+    policy x seed grids are first-class sweep axes."""
 
     policy: str
-    counts: np.ndarray            # (T,) per-second arrival counts
-    size_s: float                 # request service time on a CPU worker
-    fleet: FleetParams
+    counts: np.ndarray | None = None   # (T,) per-second arrival counts
+    size_s: float | None = None        # request service time on a CPU worker
+    fleet: FleetParams = DEFAULT_FLEET
     energy_weight: float = 1.0
     headroom: int = 0             # fpga_dynamic only
     tag: Any = None               # caller's join key; carried through
+    scenario: Any = None          # repro.workloads.ScenarioSpec | None
+    seed: int = 0                 # scenario realization seed
 
 
 @functools.lru_cache(maxsize=256)
@@ -89,15 +105,62 @@ _CANON_INTERVAL = 10
 
 
 
+def resolve_scenarios(cells: Sequence) -> list:
+    """Materialize demand for scenario-bearing cells (SweepCell or
+    EventCell): cells whose ``counts`` / ``arrival_times`` is None get it
+    synthesized from their ``scenario`` spec — ONE batched device
+    dispatch per distinct spec (`repro.workloads.scenarios.realize`,
+    shared across seeds and cached). Cells with explicit demand pass
+    through untouched; cell order is preserved."""
+    out = list(cells)
+    is_event = [hasattr(c, "arrival_times") for c in out]
+    pending: dict[Any, list[int]] = {}
+    for i, c in enumerate(out):
+        demand = c.arrival_times if is_event[i] else c.counts
+        if demand is not None:
+            continue
+        if c.scenario is None:
+            raise ValueError(
+                f"{type(c).__name__} needs explicit demand or a scenario")
+        pending.setdefault(c.scenario, []).append(i)
+    if not pending:
+        return out
+    from repro.workloads.scenarios import scenario_traces
+    for spec, idxs in pending.items():
+        seeds = sorted({out[i].seed for i in idxs})
+        by_seed = dict(zip(seeds, scenario_traces(spec, seeds)))
+        arrivals: dict[int, np.ndarray] = {}    # one stream per (spec, seed)
+        for i in idxs:
+            c, tr = out[i], by_seed[out[i].seed]
+            size = tr.request_size_s if c.size_s is None else c.size_s
+            if is_event[i]:
+                if c.seed not in arrivals:
+                    arrivals[c.seed] = tr.arrival_times(c.seed)
+                out[i] = replace(c, arrival_times=arrivals[c.seed],
+                                 size_s=size,
+                                 horizon_s=(float(spec.horizon_s)
+                                            if c.horizon_s is None
+                                            else c.horizon_s))
+            else:
+                out[i] = replace(c, counts=tr.counts, size_s=size)
+    return out
+
+
 class SweepResult:
-    """Stacked per-cell `Accum` + conversion to paper-style totals/reports."""
+    """Stacked per-cell `Accum` + conversion to paper-style totals/reports.
+
+    ``n_dispatches`` counts the `_simulate_cells` device dispatches the
+    sweep cost (one per group chunk) — the batching contract benchmarks
+    and tests assert on."""
 
     def __init__(self, cells: Sequence[SweepCell], accum: Accum,
-                 total_work: np.ndarray, total_requests: np.ndarray):
+                 total_work: np.ndarray, total_requests: np.ndarray,
+                 n_dispatches: int = 0):
         self.cells = list(cells)
         self.accum = accum                      # leaves: (n_cells,) np arrays
         self._work = total_work
         self._requests = total_requests
+        self.n_dispatches = n_dispatches
 
     def __len__(self) -> int:
         return len(self.cells)
@@ -130,8 +193,10 @@ def _pad(arr: np.ndarray, n: int) -> np.ndarray:
 
 def sweep(cells: Iterable[SweepCell], n_max: int | None = None) -> SweepResult:
     """Simulate every cell, one dispatch per (policy, interval, spin-up,
-    horizon) group chunk. Cell order is preserved in the result."""
-    cells = list(cells)
+    horizon) group chunk. Cell order is preserved in the result.
+    Scenario-bearing cells (``counts=None, scenario=spec``) are
+    synthesized first, one batched dispatch per distinct spec."""
+    cells = resolve_scenarios(cells)
     groups: dict[tuple, list[int]] = {}
     for i, c in enumerate(cells):
         if c.policy not in POLICIES:
@@ -148,6 +213,7 @@ def sweep(cells: Iterable[SweepCell], n_max: int | None = None) -> SweepResult:
     leaves = [np.zeros((n,), np.float64) for _ in Accum._fields]
     work = np.zeros((n,), np.float64)
     requests = np.zeros((n,), np.int64)
+    n_dispatches = 0
 
     for (policy, interval_s, spin_up_s, horizon, nm), idxs in groups.items():
         group = [cells[i] for i in idxs]
@@ -189,12 +255,14 @@ def sweep(cells: Iterable[SweepCell], n_max: int | None = None) -> SweepResult:
                 jnp.asarray(_pad(ew[sl], chunk)),
                 jnp.asarray(_pad(hr[sl], chunk)),
                 jnp.asarray(_pad(levels[sl], chunk)))
+            n_dispatches += 1
             got = sl.stop - sl.start
             dest = idxs[sl.start:sl.start + got]
             for leaf, out in zip(acc, leaves):
                 out[dest] = np.asarray(leaf)[:got]
 
-    return SweepResult(cells, Accum(*leaves), work, requests)
+    return SweepResult(cells, Accum(*leaves), work, requests,
+                       n_dispatches=n_dispatches)
 
 
 def sweep_events(cells: Iterable[EventCell], n_max: int = 512,
@@ -209,9 +277,11 @@ def sweep_events(cells: Iterable[EventCell], n_max: int = 512,
     order is preserved; totals carry ``breakdown['slot_overflow']``
     (always 0 when the worker-table regions are large enough — see the
     engine's equivalence contract in docs/architecture.md).
+    Scenario-bearing cells (``arrival_times=None, scenario=spec``) get
+    their arrival streams synthesized first, like `sweep`.
     """
-    return simulate_events_batch(cells, n_max=n_max, w_fpga=w_fpga,
-                                 w_cpu=w_cpu)
+    return simulate_events_batch(resolve_scenarios(cells), n_max=n_max,
+                                 w_fpga=w_fpga, w_cpu=w_cpu)
 
 
 def tune_fpga_dynamic_cells(cells: Iterable[SweepCell], max_k: int = 16,
@@ -228,7 +298,7 @@ def tune_fpga_dynamic_cells(cells: Iterable[SweepCell], max_k: int = 16,
     missing deadlines at max_k, matching the original loop's semantics
     without paying for 33 levels per cell up front."""
     from repro.sim.ratesim import tune_fpga_dynamic
-    cells = list(cells)
+    cells = resolve_scenarios(cells)
     K = max_k + 1
     units, expanded = [], []
     for c in cells:

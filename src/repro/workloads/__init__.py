@@ -1,0 +1,19 @@
+"""`repro.workloads` — scenario library + on-device batched trace synthesis.
+
+The workload axis of the reproduction: JAX-native trace generators
+(`generators`), the `Trace` container + production stand-ins + scenario
+specs and their one-dispatch batched realization (`scenarios`), the
+named scenario library (`registry`), quantitative shape validators
+(`stats`), and real-trace CSV/JSONL replay (`ingest`). The sweep engine
+(`repro.sim.sweep`) accepts `ScenarioSpec`s directly on its cells, so
+scenario x policy x seed grids are first-class sweep axes.
+"""
+
+from repro.workloads import generators, ingest, registry, stats
+from repro.workloads.scenarios import (ScenarioBatch, ScenarioSpec, Trace,
+                                       realize, scenario_traces)
+
+__all__ = [
+    "ScenarioBatch", "ScenarioSpec", "Trace", "generators", "ingest",
+    "realize", "registry", "scenario_traces", "stats",
+]

@@ -1,0 +1,96 @@
+"""Named scenario library: the workload axis of the sweep grids.
+
+Each entry is a `repro.workloads.scenarios.ScenarioSpec` — generator
+kind + parameters + demand scale + the expected-statistics ranges the
+`repro.workloads.stats` validators enforce on every realized batch. The
+benchmark suite (`benchmarks/scenario_suite.py`) runs every registered
+scenario against every dispatch policy; tests assert each scenario
+passes its own validator, so the library stays quantitatively honest
+about what workload shape each name produces (docs/EXPERIMENTS.md
+§Scenario validators records the measured values).
+
+Default horizons are fast-mode (1800 s); callers rescale with
+``spec.with_(horizon_s=...)`` for full runs. Expected ranges were
+calibrated over seeds 0..9 at both 1800 s and 7200 s horizons and hold
+per-seed-batch (4+ seeds averaged); they are deliberately wide enough to
+absorb seed-to-seed variance but tight enough to flag a generator whose
+burstiness or peak structure drifts from the scenario's intent.
+
+Conventions: ``bias_est`` is estimated at the generator's native
+resolution (``stats_agg_s`` param, default 60 s); a *scenario* models a
+single app's arrival process — the Table 7 multi-app production sets
+remain in `repro.workloads.scenarios.production_like_apps`.
+"""
+
+from __future__ import annotations
+
+from repro.workloads.scenarios import SOURCE_BIAS, ScenarioSpec
+
+SCENARIOS: dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    if spec.name in SCENARIOS:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    SCENARIOS[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ScenarioSpec:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {', '.join(names())}") from None
+
+
+def names() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+# ----------------------------------------------------------------- library
+
+register(ScenarioSpec(
+    name="steady", kind="diurnal",
+    params=(("amp1", 0.0), ("amp2", 0.0), ("noise", 0.05)),
+    expect=(("bias_est", 0.49, 0.53), ("peak_to_mean", 1.0, 1.35),
+            ("cv", 0.0, 0.12))))
+
+register(ScenarioSpec(
+    name="diurnal", kind="diurnal",
+    params=(("period_frac", 1.0), ("amp1", 0.6), ("amp2", 0.25),
+            ("noise", 0.08)),
+    expect=(("peak_to_mean", 1.3, 2.6), ("autocorr_60", 0.8, 1.0),
+            ("cv", 0.25, 0.75))))
+
+register(ScenarioSpec(
+    name="flash_crowd", kind="flash", mean_demand_workers=50.0,
+    params=(("amp", 8.0), ("ramp_s", 30.0), ("decay_s", 300.0),
+            ("noise", 0.05)),
+    expect=(("peak_to_mean", 2.5, 8.5), ("autocorr_60", 0.5, 1.0))))
+
+register(ScenarioSpec(
+    name="bursty_short", kind="bmodel",
+    params=(("bias", 0.72),),
+    expect=(("bias_est", 0.62, 0.82), ("peak_to_mean", 2.5, 60.0))))
+
+register(ScenarioSpec(
+    name="heavy_tail_mix", kind="heavy_tail",
+    params=(("bias", 0.6), ("alpha", 1.6), ("x_min_s", 0.020),
+            ("cap_s", 2.0)),
+    expect=(("bias_est", 0.53, 0.72), ("peak_to_mean", 1.5, 20.0))))
+
+register(ScenarioSpec(
+    name="azure_like", kind="bmodel",
+    params=(("bias", SOURCE_BIAS["azure"]),),
+    expect=(("bias_est", 0.60, 0.76), ("peak_to_mean", 2.0, 40.0))))
+
+register(ScenarioSpec(
+    name="alibaba_like", kind="bmodel",
+    params=(("bias", SOURCE_BIAS["alibaba"]),),
+    expect=(("bias_est", 0.52, 0.65), ("peak_to_mean", 1.2, 12.0))))
+
+register(ScenarioSpec(
+    name="csv_replay", kind="replay", mean_demand_workers=80.0,
+    params=(("path", "sample_trace.csv"), ("stats_agg_s", 10)),
+    expect=(("peak_to_mean", 1.5, 4.0), ("autocorr_60", 0.3, 1.0))))

@@ -1,0 +1,284 @@
+"""Tests for the `repro.workloads` subsystem: generators, statistics
+validators, the scenario registry, sweep-axis integration, and ingest.
+
+Contracts covered:
+  * generators are deterministic in the key, shape-correct, and
+    mean-faithful (MMPP stationary mean, diurnal exact mean, b-model
+    approximate mean);
+  * `stats.bias_estimate` recovers the generating b-model bias;
+  * every registered scenario realizes and passes its own validator
+    ranges (the same assertion benchmarks/scenario_suite.py makes);
+  * scenario-bearing `SweepCell`s produce totals identical to explicit
+    counts cells, whole scenario x policy x seed grids keep the sweep
+    dispatch count at one per policy group, and `EventCell` resolution
+    synthesizes consistent arrival streams;
+  * CSV/JSONL ingest round-trips, resamples timestamps, and tiles to
+    arbitrary horizons.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim.events_batched import EventCell
+from repro.sim.sweep import (SweepCell, resolve_scenarios, sweep,
+                             tune_fpga_dynamic_cells)
+from repro.workloads import generators, ingest, registry, stats
+from repro.workloads.scenarios import (ScenarioSpec, realize,
+                                       scenario_traces)
+import repro.workloads.scenarios as scenarios_mod
+
+
+# -------------------------------------------------------------- generators
+
+def test_bmodel_rates_jnp_mean_and_determinism():
+    key = jax.random.PRNGKey(0)
+    r1 = np.asarray(generators.bmodel_rates_jnp(key, 0.65, 1200, 500.0))
+    r2 = np.asarray(generators.bmodel_rates_jnp(key, 0.65, 1200, 500.0))
+    np.testing.assert_array_equal(r1, r2)
+    assert r1.shape == (1200,)
+    assert np.all(r1 >= 0)
+    # Per-seed means deviate for bursty cascades (the power-of-two minute
+    # cascade is truncated to the horizon — same property as
+    # synthetic_trace); the mean is faithful in expectation over seeds.
+    means = [float(np.asarray(generators.bmodel_rates_jnp(
+        jax.random.PRNGKey(s), 0.65, 1200, 500.0)).mean())
+        for s in range(10)]
+    np.testing.assert_allclose(np.mean(means), 500.0, rtol=0.15)
+    # ...and exact for the uniform cascade (no truncation sensitivity).
+    flat = np.asarray(generators.bmodel_rates_jnp(key, 0.5, 1200, 500.0))
+    np.testing.assert_allclose(flat, 500.0, rtol=1e-4)
+
+
+def test_mmpp_two_levels_and_stationary_mean():
+    key = jax.random.PRNGKey(1)
+    r = np.asarray(generators.mmpp_rates(key, 20000, 100.0, burst_ratio=8.0,
+                                         p_enter=0.02, p_exit=0.2))
+    assert len(np.unique(np.round(r, 3))) == 2          # base + burst only
+    np.testing.assert_allclose(r.mean(), 100.0, rtol=0.15)
+    assert r.max() / r.min() == pytest.approx(8.0, rel=1e-5)
+
+
+def test_diurnal_exact_mean_and_nonnegative():
+    r = np.asarray(generators.diurnal_rates(jax.random.PRNGKey(2), 2000,
+                                            50.0, period_s=2000.0))
+    assert np.all(r >= 0)
+    np.testing.assert_allclose(r.mean(), 50.0, rtol=1e-5)
+
+
+def test_flash_crowd_overlay_shape():
+    ov = np.asarray(generators.flash_crowd_overlay(
+        jax.random.PRNGKey(3), 2000, amp=6.0, ramp_s=20.0, decay_s=100.0,
+        window=(0.3, 0.6)))
+    assert ov.min() >= 1.0
+    # The integer-second grid may straddle the exact ramp peak.
+    assert ov.max() == pytest.approx(6.0, rel=2e-2)
+    onset = np.argmax(ov > 1.0 + 1e-6)
+    assert 0.3 * 2000 - 25 <= onset <= 0.6 * 2000 + 1   # inside the window
+    assert np.all(ov[:max(onset - 1, 0)] == 1.0)        # quiet before onset
+
+
+def test_heavy_tail_size_samplers_bounded():
+    pare = np.asarray(generators.pareto_sizes(jax.random.PRNGKey(4), 2000,
+                                              alpha=1.5, x_min_s=0.02,
+                                              cap_s=5.0))
+    logn = np.asarray(generators.lognormal_sizes(jax.random.PRNGKey(5), 2000,
+                                                 lo_s=0.01, hi_s=10.0))
+    assert pare.min() >= 0.02 and pare.max() <= 5.0
+    assert pare.max() / np.median(pare) > 3.0           # actually heavy-tailed
+    assert logn.min() >= 0.01 and logn.max() <= 10.0
+
+
+def test_poisson_counts_deterministic_and_mean():
+    rates = np.full((5000,), 40.0, np.float32)
+    c1 = np.asarray(generators.poisson_counts(jax.random.PRNGKey(6), rates))
+    c2 = np.asarray(generators.poisson_counts(jax.random.PRNGKey(6), rates))
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_allclose(c1.mean(), 40.0, rtol=0.05)
+
+
+# ------------------------------------------------------------------- stats
+
+def test_bias_estimate_recovers_bmodel_bias():
+    from repro.core.bmodel import bmodel_series
+    for b in (0.5, 0.62, 0.72):
+        ests = [stats.bias_estimate(np.asarray(
+            bmodel_series(jax.random.PRNGKey(s), b, 10, 1000.0)))
+            for s in range(5)]
+        assert abs(np.mean(ests) - b) < 0.03, (b, np.mean(ests))
+
+
+def test_basic_stats_on_constant_series():
+    x = np.full((256,), 7.0)
+    assert stats.bias_estimate(x) == pytest.approx(0.5)
+    assert stats.peak_to_mean(x) == pytest.approx(1.0)
+    assert stats.autocorr(x, 1) == pytest.approx(1.0)
+    assert stats.cv(x) == pytest.approx(0.0)
+
+
+def test_validate_flags_out_of_range():
+    spec = ScenarioSpec(name="impossible", kind="bmodel", horizon_s=600,
+                        params=(("bias", 0.6),),
+                        expect=(("peak_to_mean", 100.0, 200.0),))
+    batch = realize(spec, (0, 1))
+    ok, measured, failures = stats.validate(spec, batch.rates)
+    assert not ok
+    assert "peak_to_mean" in failures[0]
+    assert measured["peak_to_mean"] < 100.0
+
+
+def test_unknown_scenario_kind_rejected():
+    with pytest.raises(ValueError, match="unknown scenario kind"):
+        ScenarioSpec(name="bad", kind="nope")
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_has_the_full_library():
+    assert len(registry.names()) >= 8
+    for required in ("steady", "diurnal", "flash_crowd", "bursty_short",
+                     "heavy_tail_mix", "azure_like", "alibaba_like",
+                     "csv_replay"):
+        assert required in registry.names()
+    with pytest.raises(KeyError, match="unknown scenario"):
+        registry.get("nope")
+
+
+@pytest.mark.parametrize("name", registry.names())
+def test_every_scenario_validates(name):
+    spec = registry.get(name)
+    batch = realize(spec, (0, 1, 2, 3))
+    assert batch.rates.shape == (4, spec.horizon_s)
+    assert batch.counts.shape == (4, spec.horizon_s)
+    assert batch.counts.min() >= 0
+    ok, measured, failures = stats.validate(spec, batch.rates)
+    assert ok, failures
+    # counts are Poisson samples of the rates: totals agree within noise
+    for s in range(4):
+        vol = batch.rates[s].sum()
+        assert abs(batch.counts[s].sum() - vol) < 6 * np.sqrt(vol) + 10
+
+
+def test_realize_caches_and_counts_dispatches():
+    spec = registry.get("steady").with_(horizon_s=600)
+    before = scenarios_mod.SYNTH_DISPATCHES
+    b1 = realize(spec, (0, 1))
+    mid = scenarios_mod.SYNTH_DISPATCHES
+    b2 = realize(spec, (0, 1))
+    assert mid == before + 1                     # one dispatch per cache miss
+    assert scenarios_mod.SYNTH_DISPATCHES == mid  # cache hit: no new dispatch
+    assert b1 is b2
+
+
+# ------------------------------------------------------- sweep integration
+
+def test_scenario_cells_match_explicit_cells():
+    spec = registry.get("bursty_short").with_(horizon_s=600)
+    traces = scenario_traces(spec, [0, 1])
+    explicit = [SweepCell("spork", tr.counts, tr.request_size_s,
+                          DEFAULT_FLEET) for tr in traces]
+    named = [SweepCell("spork", fleet=DEFAULT_FLEET, scenario=spec, seed=s)
+             for s in (0, 1)]
+    want, got = sweep(explicit), sweep(named)
+    for i in range(2):
+        w, g = want.totals(i), got.totals(i)
+        assert w.energy_j == pytest.approx(g.energy_j)
+        assert w.cost_usd == pytest.approx(g.cost_usd)
+        assert w.requests == g.requests
+
+
+def test_scenario_grid_one_dispatch_per_policy_group():
+    specs = [registry.get(n).with_(horizon_s=600)
+             for n in ("steady", "bursty_short")]
+    cells = [SweepCell(policy, fleet=DEFAULT_FLEET, scenario=spec, seed=s)
+             for policy in ("spork", "cpu_dynamic")
+             for spec in specs for s in range(2)]
+    res = sweep(cells)
+    assert len(res) == 8
+    assert res.n_dispatches == 2        # one chunk per policy group
+    assert all(c.counts is not None for c in res.cells)
+
+
+def test_cell_without_demand_or_scenario_rejected():
+    with pytest.raises(ValueError, match="explicit demand or a scenario"):
+        sweep([SweepCell("spork", fleet=DEFAULT_FLEET)])
+
+
+def test_tune_fpga_dynamic_accepts_scenario_cells():
+    spec = registry.get("steady").with_(horizon_s=600)
+    (h, tot), = tune_fpga_dynamic_cells(
+        [SweepCell("fpga_dynamic", fleet=DEFAULT_FLEET, scenario=spec,
+                   seed=0)], max_k=8)
+    assert tot.deadline_misses == 0
+    assert tot.requests > 0
+
+
+def test_event_cell_without_demand_fails_fast_in_engine():
+    # simulate_events_batch does not resolve scenarios itself (that's
+    # sweep_events' job): a demand-less cell must fail with a clear
+    # message, not an opaque TypeError deep inside grouping.
+    from repro.sim.events_batched import simulate_events_batch
+    spec = registry.get("steady").with_(horizon_s=120)
+    with pytest.raises(ValueError, match="sweep_events"):
+        simulate_events_batch([EventCell("spork", fleet=DEFAULT_FLEET,
+                                         scenario=spec, seed=0)])
+
+
+def test_event_cell_scenario_resolution():
+    spec = registry.get("steady").with_(horizon_s=120,
+                                        mean_demand_workers=5.0)
+    cell, = resolve_scenarios([EventCell("spork", fleet=DEFAULT_FLEET,
+                                         scenario=spec, seed=1)])
+    tr = scenario_traces(spec, [1])[0]
+    assert cell.size_s == tr.request_size_s
+    assert cell.horizon_s == 120.0
+    assert len(cell.arrival_times) == int(tr.counts.sum())
+    np.testing.assert_array_equal(cell.arrival_times,
+                                  tr.arrival_times(1))
+
+
+# ------------------------------------------------------------------ ingest
+
+def test_csv_roundtrip_with_header_and_timestamps(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("t,rate\n0,10\n10,20\n20,10\n")
+    r = ingest.read_series(str(p))
+    assert r.shape == (21,)
+    assert r[0] == 10 and r[10] == 20 and r[5] == pytest.approx(15.0)
+
+
+def test_csv_headerless_single_column(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("5\n6\n7\n")
+    np.testing.assert_array_equal(ingest.read_series(str(p)), [5, 6, 7])
+
+
+def test_jsonl_roundtrip(tmp_path):
+    p = tmp_path / "t.jsonl"
+    rows = [{"t": i * 2.0, "rate": 3.0 + i} for i in range(4)]
+    p.write_text("\n".join(json.dumps(r) for r in rows) + "\n")
+    r = ingest.read_series(str(p))
+    assert r.shape == (7,)
+    assert r[0] == 3.0 and r[6] == 6.0 and r[1] == pytest.approx(3.5)
+
+
+def test_replay_rates_tiles_and_rescales():
+    out = ingest.replay_rates(np.array([1.0, 3.0]), 7, mean_rate=10.0)
+    assert out.shape == (7,)
+    np.testing.assert_allclose(out.mean(), 10.0, rtol=1e-6)
+    with pytest.raises(ValueError, match="empty replay series"):
+        ingest.replay_rates(np.array([]), 5)
+
+
+def test_replay_trace_from_packaged_sample():
+    import os
+    from repro.workloads.scenarios import _DATA_DIR
+    tr = ingest.replay_trace(os.path.join(_DATA_DIR, "sample_trace.csv"),
+                             request_size_s=0.05, horizon_s=400,
+                             mean_demand_workers=20.0, seed=3)
+    assert tr.horizon_s == 400
+    assert tr.counts is not None and tr.counts.shape == (400,)
+    np.testing.assert_allclose(tr.rates_per_s.mean(), 20.0 / 0.05, rtol=1e-6)

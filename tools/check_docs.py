@@ -11,7 +11,11 @@ Validates that the documentation layer stays tethered to the code:
   3. `path.py::test_name`-style test references name real tests;
   4. dotted references with a trailing attribute (e.g.
      `repro.sim.sweep.sweep_events`) have the attribute defined in the
-     resolved module.
+     resolved module;
+  5. every markdown-file mention in `src/` / `benchmarks/` / `tools/` /
+     `examples/` Python sources (docstrings and comments — e.g. "see
+     EXPERIMENTS.md §Perf") resolves to a real file at the repo root or
+     under docs/, so doc references in code can't rot silently.
 
 Usage: python tools/check_docs.py   (exit 1 on any broken reference)
 """
@@ -37,6 +41,15 @@ PATH_RE = re.compile(
     r"\b((?:repro|benchmarks|tests|tools|examples|results)"
     r"/[\w./-]+?\.(?:py|json|md))\b")
 TESTREF_RE = re.compile(r"\b(tests/[\w/]+\.py)::(\w+)")
+# markdown-file mentions in Python sources: explicit paths (any
+# directory prefix, e.g. docs/architecture.md, benchmarks/README.md)
+# are resolved from the repo root; bare names (EXPERIMENTS.md,
+# DESIGN.md — the lookbehind keeps a path's basename from matching
+# twice) at the root or under docs/
+MD_PATH_IN_PY_RE = re.compile(r"\b((?:[\w-]+/)+[\w.-]+\.md)\b")
+MD_BARE_IN_PY_RE = re.compile(r"(?<![\w/-])([A-Za-z][\w.-]*\.md)\b")
+
+PY_SCAN_DIRS = ("src", "benchmarks", "tools", "examples")
 
 
 def fail(errors: list[str], msg: str) -> None:
@@ -101,6 +114,26 @@ def check_paths(path: str, text: str, errors: list[str]) -> None:
             fail(errors, f"{path}: {ref} has no test named {test}")
 
 
+def iter_py_files():
+    for d in PY_SCAN_DIRS:
+        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, d)):
+            dirnames[:] = [n for n in dirnames if n != "__pycache__"]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    yield os.path.relpath(os.path.join(dirpath, name), ROOT)
+
+
+def check_md_refs_in_py(path: str, text: str, errors: list[str]) -> None:
+    """Every .md mention in a Python source must resolve: explicit paths
+    from the repo root, bare names at the root or under docs/."""
+    refs = {r: [r] for r in MD_PATH_IN_PY_RE.findall(text)}
+    refs.update((r, [r, os.path.join("docs", r)])
+                for r in MD_BARE_IN_PY_RE.findall(text))
+    for ref, candidates in sorted(refs.items()):
+        if not any(os.path.isfile(os.path.join(ROOT, c)) for c in candidates):
+            fail(errors, f"{path}: dangling doc reference {ref}")
+
+
 def main() -> int:
     errors: list[str] = []
     for path in DOC_FILES:
@@ -112,9 +145,14 @@ def main() -> int:
         check_links(path, text, errors)
         check_dotted(path, text, errors)
         check_paths(path, text, errors)
+    n_py = 0
+    for path in iter_py_files():
+        n_py += 1
+        check_md_refs_in_py(path, open(os.path.join(ROOT, path)).read(),
+                            errors)
     for e in errors:
         print(f"check_docs: {e}")
-    print(f"check_docs: {len(DOC_FILES)} files, "
+    print(f"check_docs: {len(DOC_FILES)} doc files + {n_py} py files, "
           f"{'FAIL' if errors else 'OK'}")
     return 1 if errors else 0
 
