@@ -38,6 +38,18 @@ def fast_params():
     return (3, 1800, 4) if FAST else (10, 7200, None)
 
 
+def backend_meta() -> dict:
+    """{backend, n_devices} for the sweep execution backend this run
+    resolves to (``BENCH_SWEEP_BACKEND``), recorded with every suite
+    entry so BENCH_sweep.json numbers are attributable to a backend."""
+    try:
+        from repro.sim.exec import get_backend
+        b = get_backend()
+        return {"backend": b.name, "n_devices": b.n_devices}
+    except Exception:   # pragma: no cover — meta only, never break a bench
+        return {}
+
+
 def emit(name: str, rows: list[dict], t0: float) -> None:
     """Scaffold contract: ``name,us_per_call,derived`` CSV lines, plus a
     machine-readable suite -> {wall seconds, rows} entry in
@@ -79,7 +91,8 @@ def record_sweep(name: str, wall_s: float, n_rows: int) -> None:
     (capped at the trailing HISTORY_CAP) so the file records a perf
     trajectory across PRs instead of overwriting it."""
     data = _load_sweep()
-    entry = {"wall_s": round(wall_s, 3), "rows": n_rows, "fast": FAST}
+    entry = {"wall_s": round(wall_s, 3), "rows": n_rows, "fast": FAST,
+             **backend_meta()}
     prev = data.get(name) or {}
     history = list(prev.get("history", []))
     if not history and prev:        # migrate pre-history records

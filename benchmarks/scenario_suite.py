@@ -104,7 +104,9 @@ def run() -> list[dict]:
     record_kv("scenario_suite_meta",
               scenarios=scen_meta, n_seeds=n_seeds, horizon_s=horizon,
               sweep_dispatches=res.n_dispatches,
-              sweep_cells=len(res), fast=FAST)
+              sweep_cells=len(res), fast=FAST,
+              backend=res.backend, n_devices=res.n_devices,
+              dispatch_devices=res.dispatch_devices)
     return rows
 
 

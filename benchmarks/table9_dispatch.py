@@ -85,7 +85,7 @@ def run(engine: str | None = None) -> list[dict]:
                  for label, apps in grid
                  for disp in DISPATCHERS
                  for arr, size_s in apps]
-        totals = sweep_events(cells, n_max=N_MAX)
+        totals = sweep_events(cells, n_max=N_MAX).totals()
         for cell, tot in zip(cells, totals):
             assert tot.breakdown.get("slot_overflow", 0) == 0
             prev = merged.get(cell.tag)

@@ -2,25 +2,41 @@
 
 The batched sweep engine runs every suite through a handful of fixed XLA
 program shapes (policy x scheduling interval x chunk width — see
-repro/sim/sweep.py). Compiling those is a one-time cost amortized across
+repro/sim/plan.py). Compiling those is a one-time cost amortized across
 every suite and — through the persistent compilation cache — across
 runs, so run.py pays it here, up front, as its own recorded step instead
 of charging whichever figure happens to hit a shape first.
 
-Each warmed shape is reported as a row, so the emitted CSV/JSON makes the
-cost visible rather than hiding it inside the suites.
+The shapes are produced by the real planner (`repro.sim.plan.plan_sweep`
+over minimal zero-demand cell lists) and dispatched through the same
+execution backend the suites will use (`repro.sim.exec.get_backend`,
+i.e. ``BENCH_SWEEP_BACKEND``): a ``mesh`` run warms the shard_map-ped
+programs, not the local ones, and any change to the planner's group
+keys or array layout warms the new layout automatically.
+
+Each warmed shape is reported as a row, so the emitted CSV/JSON makes
+the cost visible rather than hiding it inside the suites.
 """
 
 from __future__ import annotations
 
+import os
+import sys
+
+# allow `python benchmarks/warmup.py` from anywhere
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.workers import DEFAULT_FLEET
-from repro.sim.ratesim import FleetScalars, _simulate_cells
-from repro.sim.sweep import CHUNK, CHUNK_BIG, _CANON_INTERVAL, _N_MAX_CAP
+from repro.sim.exec import get_backend
+from repro.sim.plan import CHUNK, CHUNK_BIG, plan_sweep
+from repro.sim.sweep import SweepCell
 
 from benchmarks.common import FAST, fast_params
 
@@ -34,29 +50,37 @@ def _shapes() -> list[tuple[str, int, int]]:
                    ("mark_ideal", spin, CHUNK),
                    ("fpga_dynamic", spin, CHUNK),
                    ("fpga_dynamic", spin, CHUNK_BIG)]
-    # latency-free policies run under the canonical key (sweep regroups them)
-    shapes += [("cpu_dynamic", _CANON_INTERVAL, CHUNK),
-               ("fpga_static", _CANON_INTERVAL, CHUNK)]
+    # latency-free policies run under the canonical key (the planner
+    # regroups them, so the default fleet's spin-up value is irrelevant)
+    shapes += [("cpu_dynamic", 10, CHUNK), ("fpga_static", 10, CHUNK)]
     return shapes
+
+
+def _cells(policy: str, spin: int, chunk: int,
+           horizon: int) -> list[SweepCell]:
+    """Minimal zero-demand cell list whose plan is exactly one dispatch
+    of the target (policy, interval=spin, spin, chunk) program: one cell
+    pads to CHUNK; CHUNK+1 cells force cheap policies onto CHUNK_BIG."""
+    fleet = DEFAULT_FLEET.replace(
+        fpga=DEFAULT_FLEET.fpga.replace(spin_up_s=float(spin)))
+    counts = np.zeros(((horizon // spin) * spin,), np.int64)
+    n = 1 if chunk == CHUNK else CHUNK + 1
+    return [SweepCell(policy, counts, 0.05, fleet) for _ in range(n)]
 
 
 def run() -> list[dict]:
     _, horizon, _ = fast_params()
-    fs = FleetScalars.from_fleet(DEFAULT_FLEET)
+    backend = get_backend()
     rows = []
     for policy, spin, chunk in _shapes():
-        interval = spin
-        h = (horizon // interval) * interval
-        fs_b = FleetScalars(*[jnp.full((chunk,), leaf, jnp.float32)
-                              for leaf in fs])
-        out = _simulate_cells(
-            policy, interval, spin, _N_MAX_CAP, h,
-            jnp.zeros((chunk, h), jnp.int32),
-            jnp.full((chunk,), 0.05, jnp.float32), fs_b,
-            jnp.ones((chunk,), jnp.float32),
-            jnp.zeros((chunk,), jnp.int32), jnp.zeros((chunk,), jnp.int32))
-        jax.block_until_ready(out)
-        rows.append({"policy": policy, "spin_up_s": spin, "chunk": chunk})
+        plan = plan_sweep(_cells(policy, spin, chunk, horizon))
+        assert {d.chunk for d in plan.dispatches} == {chunk}, (
+            policy, spin, chunk, [d.chunk for d in plan.dispatches])
+        for d in plan.dispatches:
+            jax.block_until_ready(backend.run(d))
+        rows.append({"policy": policy, "spin_up_s": spin, "chunk": chunk,
+                     "backend": backend.name,
+                     "n_devices": backend.devices_for(plan.dispatches[0])})
     return rows
 
 

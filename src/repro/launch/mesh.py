@@ -27,6 +27,19 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_cell_mesh(devices=None):
+    """1-D ``('cells',)`` mesh for sharding sweep-cell batches
+    (`repro.sim.exec.MeshBackend`): the leading cell axis of a sweep
+    chunk is split across ``devices`` (default: all local devices).
+    Fabricate CPU devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or newer
+    JAX's ``jax_num_cpu_devices`` config, absent on this pin)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = list(devices) if devices is not None else jax.devices()
+    return Mesh(np.array(devs), ("cells",))
+
+
 # v5e hardware constants for the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12         # FLOP/s
 HBM_BW = 819e9                   # bytes/s

@@ -7,6 +7,11 @@ with shard_map: one program, every device simulating its slice.
 
     PYTHONPATH=src python -m repro.launch.spork_sim --points 64 --mesh host
     (dry-run path: repro.launch.dryrun exercises the same grid function)
+
+This launcher is the standalone demo of cell-axis sharding; the
+productionized version — the same idea behind the real sweep entry
+points, with planning, padding and bit-identity tests — is
+`repro.sim.exec.MeshBackend` (select with ``BENCH_SWEEP_BACKEND=mesh``).
 """
 
 from __future__ import annotations

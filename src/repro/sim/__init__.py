@@ -5,9 +5,15 @@ over traces and worker parameters). The workhorse for every rate-level
 experiment. `simulate_batch` runs a batch of traces per dispatch;
 `tune_fpga_dynamic` evaluates all headroom levels in one dispatch.
 
-`sweep` — the batched sweep engine: groups arbitrary parameter-grid cells
-(`SweepCell`) by their static axes and simulates each group in one jitted
-vmapped dispatch. The benchmark suites (Figs. 5-7, Table 8) run on it.
+`sweep` — the batched sweep engine's entry points, thin wrappers over a
+plan/execute pipeline: `plan` turns any cell list (`SweepCell` /
+`EventCell`) into an explicit `SweepPlan` (scenario resolution, static-
+axis grouping, fixed-vocabulary chunk padding, scatter indices) and
+`exec` runs it on a pluggable backend — `LocalBackend` (single-device
+vmapped dispatches, bit-identical default) or `MeshBackend` (the same
+programs shard_map-ped over the cell axis of a device mesh;
+`BENCH_SWEEP_BACKEND` selects). The benchmark suites (Figs. 5-7,
+Table 8) run on it.
 
 `events` — exact discrete-event simulator (per-request semantics) used for
 dispatch-policy studies (paper Table 9) and as ground truth in tests.

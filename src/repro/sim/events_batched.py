@@ -76,7 +76,7 @@ from repro.core.metrics import RunTotals
 from repro.core.predictor import ObjectiveCoeffs, allocator_tick_jnp
 from repro.core.workers import DEFAULT_FLEET, FleetParams
 from repro.sim.events import DISPATCHERS
-from repro.sim.ratesim import Accum, accum_to_totals
+from repro.sim.ratesim import Accum
 
 DISPATCH_CODES = {d: i for i, d in enumerate(DISPATCHERS)}
 
@@ -412,11 +412,19 @@ def _simulate_one(n_max: int, w_f: int, w_c: int, es: EventScalars, code,
     return acc, c.overflow
 
 
-@functools.partial(jax.jit, static_argnames=("n_max", "w_fpga", "w_cpu"))
-def _simulate_cells(n_max: int, w_fpga: int, w_cpu: int, es: EventScalars,
-                    codes, times, tick_t, is_tick) -> tuple:
+def _simulate_cells_core(n_max: int, w_fpga: int, w_cpu: int,
+                         es: EventScalars, codes, times, tick_t,
+                         is_tick) -> tuple:
+    """Unjitted cell-batched core (vmap over the cell axis). Exposed so
+    `repro.sim.exec.MeshBackend` can `shard_map` it over a device mesh;
+    `_simulate_cells` is its jitted single-device twin."""
     return jax.vmap(functools.partial(_simulate_one, n_max, w_fpga, w_cpu))(
         es, codes, times, tick_t, is_tick)
+
+
+_simulate_cells = functools.partial(
+    jax.jit, static_argnames=("n_max", "w_fpga", "w_cpu"))(
+    _simulate_cells_core)
 
 
 def _scalars(cell: "EventCell") -> tuple:
@@ -488,74 +496,24 @@ def _pad_pow2(n: int, lo: int = 4, hi: int | None = None) -> int:
 
 def simulate_events_batch(cells: Iterable[EventCell], n_max: int = 512,
                           w_fpga: int = 32, w_cpu: int = 64,
-                          ) -> list[RunTotals]:
+                          backend=None) -> list[RunTotals]:
     """Run every DES cell, one dispatch per (entry-count bucket) group
     chunk; cell order is preserved. Totals carry
     ``breakdown['slot_overflow']`` (0 unless a table region or
-    ``max_fpgas`` was too small for the trace)."""
-    cells = list(cells)
-    for cl in cells:
-        if cl.dispatcher not in DISPATCH_CODES:
-            raise ValueError(f"unknown dispatcher {cl.dispatcher!r}")
-        if cl.arrival_times is None or cl.size_s is None:
-            raise ValueError(
-                "EventCell without explicit demand (arrival_times + "
-                "size_s); scenario-bearing cells must go through "
-                "repro.sim.sweep.sweep_events, which resolves them")
-    entries: dict[int, list] = {}
-    groups: dict[int, list[int]] = {}
-    for i, cl in enumerate(cells):
-        arr = np.asarray(cl.arrival_times, np.float64)
-        horizon = float(cl.horizon_s if cl.horizon_s is not None
-                        else (arr[-1] + 1.0 if len(arr) else 1.0))
-        entries[i] = _entries(arr, cl.fleet.T_s, horizon)
-        n_e = len(entries[i])
-        # pow2 up to 256 entries, then multiples of 256: every padded
-        # entry costs a full BLOCK of inert arrival slots, so tight
-        # padding beats shape reuse once streams are long.
-        E = (_pad_pow2(n_e, lo=4) if n_e <= 256
-             else 256 * int(math.ceil(n_e / 256)))
-        groups.setdefault(E, []).append(i)
+    ``max_fpgas`` was too small for the trace).
 
-    out: list[RunTotals | None] = [None] * len(cells)
-    for E, idxs in groups.items():
-        chunk = _pad_pow2(len(idxs), lo=4, hi=EV_CHUNK_MAX)
-        start = 0
-        while start < len(idxs):
-            sl = idxs[start:start + chunk]
-            start += chunk
-            pad = sl + [sl[0]] * (chunk - len(sl))
-            times = np.full((len(pad), E, BLOCK), np.inf, np.float32)
-            tick_t = np.zeros((len(pad), E), np.float32)
-            is_tick = np.zeros((len(pad), E), bool)
-            for r, i in enumerate(pad):
-                for e, (row, tick) in enumerate(entries[i]):
-                    times[r, e, :len(row)] = row
-                    if tick is not None:
-                        tick_t[r, e] = tick
-                        is_tick[r, e] = True
-            scal = np.array([_scalars(cells[i])[:-2] for i in pad],
-                            np.float32)
-            es = EventScalars(
-                *(jnp.asarray(scal[:, j]) for j in range(scal.shape[1])),
-                max_fpgas=jnp.asarray(
-                    [cells[i].fleet.max_fpgas for i in pad], np.int32),
-                allocate=jnp.asarray(
-                    [cells[i].allocate_fpgas for i in pad], bool))
-            codes = jnp.asarray([DISPATCH_CODES[cells[i].dispatcher]
-                                 for i in pad], np.int32)
-            acc, over = _simulate_cells(
-                n_max, w_fpga, w_cpu, es, codes, jnp.asarray(times),
-                jnp.asarray(tick_t), jnp.asarray(is_tick))
-            acc_np = [np.asarray(leaf) for leaf in acc]
-            over_np = np.asarray(over)
-            for r, i in enumerate(sl):
-                n_req = len(cells[i].arrival_times)
-                tot = accum_to_totals(Accum(*[leaf[r] for leaf in acc_np]),
-                                      n_req * cells[i].size_s, n_req)
-                tot.breakdown["slot_overflow"] = int(over_np[r])
-                out[i] = tot
-    return out  # type: ignore[return-value]
+    A thin plan+execute wrapper: the group/pad/scatter machinery lives
+    in `repro.sim.plan.plan_events` and execution in `repro.sim.exec`
+    (``backend=`` selects it; None reads ``BENCH_SWEEP_BACKEND``).
+    Cells must carry explicit demand — scenario-bearing cells go
+    through `repro.sim.sweep.sweep_events`, which resolves them first.
+    Returns a bare ``list[RunTotals]``; use `sweep_events` for the
+    metadata-carrying `repro.sim.plan.EventSweepResult`."""
+    from repro.sim.exec import execute
+    from repro.sim.plan import plan_events
+    plan = plan_events(cells, n_max=n_max, w_fpga=w_fpga, w_cpu=w_cpu,
+                       resolve=False)
+    return execute(plan, backend).totals()
 
 
 def simulate_events_batched(arrival_times: np.ndarray, size_s: float,

@@ -1,0 +1,227 @@
+"""Sweep execution backends: run a `SweepPlan` locally or over a mesh.
+
+The planning layer (`repro.sim.plan`) reduces every sweep entry point to
+the same question: given a list of `ChunkDispatch`es — static program
+arguments plus padded host arrays with a leading cell axis — run each
+one and scatter the rows back into cell order. This module owns that
+question, behind a two-backend interface:
+
+  * `LocalBackend` (default): the single-device vmapped path — each
+    dispatch calls the same jitted programs
+    (`ratesim._simulate_cells`, `events_batched._simulate_cells`) the
+    pre-plan/execute code called, with identically laid-out arguments,
+    so results are bit-identical to the historical path and the
+    existing golden tests pin it.
+  * `MeshBackend`: the same programs `shard_map`-ped over the cell axis
+    of a 1-D device mesh (`repro.launch.mesh.make_cell_mesh`). Every
+    vmap lane is independent, so sharding lanes across devices changes
+    *where* each cell runs, not *what* it computes — `MeshBackend`
+    results are tested bit-identical to `LocalBackend` on a forced
+    multi-device CPU host (tests/test_plan.py; CI runs the sweep/DES
+    equivalence suites under ``XLA_FLAGS=
+    --xla_force_host_platform_device_count=2`` with
+    ``BENCH_SWEEP_BACKEND=mesh``). Chunk shapes come from the planner's
+    fixed power-of-two-friendly vocabulary, so each dispatch uses the
+    largest power-of-two device count that divides its chunk.
+
+`get_backend` resolves the ``backend=`` kwarg threaded through `sweep` /
+`sweep_events` / `tune_fpga_dynamic_cells` and the benchmarks: a
+`Backend` instance passes through, a name maps to a cached singleton,
+and None falls back to the ``BENCH_SWEEP_BACKEND`` env var (default
+``local``). Sharding-scheme rationale: docs/DESIGN.md §5; the
+plan -> backend flow: docs/architecture.md "Execution backends".
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim import events_batched, ratesim
+from repro.sim.plan import (Accum, ChunkDispatch, EventSweepResult,
+                            SweepPlan, SweepResult, accum_to_totals)
+
+ENV_VAR = "BENCH_SWEEP_BACKEND"
+
+
+def _rate_args(d: ChunkDispatch) -> tuple:
+    """Traced arguments for `ratesim._simulate_cells`, in order, laid
+    out exactly as the pre-plan/execute sweep loop built them."""
+    a = d.arrays
+    fs = ratesim.FleetScalars(*(jnp.asarray(a["scalars"][:, j])
+                                for j in range(a["scalars"].shape[1])))
+    return (jnp.asarray(a["counts"]), jnp.asarray(a["sizes"]), fs,
+            jnp.asarray(a["energy_weight"]), jnp.asarray(a["headroom"]),
+            jnp.asarray(a["levels"]))
+
+
+def _event_args(d: ChunkDispatch) -> tuple:
+    """Traced arguments for `events_batched._simulate_cells`, in order."""
+    a = d.arrays
+    es = events_batched.EventScalars(
+        *(jnp.asarray(a["scalars"][:, j])
+          for j in range(a["scalars"].shape[1])),
+        max_fpgas=jnp.asarray(a["max_fpgas"]),
+        allocate=jnp.asarray(a["allocate"]))
+    return (es, jnp.asarray(a["codes"]), jnp.asarray(a["times"]),
+            jnp.asarray(a["tick_t"]), jnp.asarray(a["is_tick"]))
+
+
+class Backend:
+    """One way of running a plan's dispatches. Subclasses implement
+    `run(dispatch)` (returning the core's output pytree) and
+    `devices_for(dispatch)` (how many devices that dispatch spans)."""
+
+    name = "abstract"
+
+    @property
+    def n_devices(self) -> int:
+        return 1
+
+    def devices_for(self, d: ChunkDispatch) -> int:
+        return 1
+
+    def run(self, d: ChunkDispatch):
+        raise NotImplementedError
+
+
+class LocalBackend(Backend):
+    """Single-device vmapped execution — the bit-identical default.
+
+    Calls the exact jitted programs the pre-refactor sweep loops called
+    (`ratesim._simulate_cells` / `events_batched._simulate_cells`), so
+    compiled-program reuse (and the persistent compilation cache)
+    behaves as before."""
+
+    name = "local"
+
+    def run(self, d: ChunkDispatch):
+        if d.kind == "rate":
+            return ratesim._simulate_cells(*d.static, *_rate_args(d))
+        return events_batched._simulate_cells(*d.static, *_event_args(d))
+
+
+class MeshBackend(Backend):
+    """Sharded execution: `shard_map` over the chunk/cell axis.
+
+    The planner's chunk axis is split over a 1-D ``('cells',)`` device
+    mesh; each device runs the same vmapped simulator core on its lane
+    shard. Lanes are independent, so per-cell results are bit-identical
+    to `LocalBackend` (tested on a forced 2-device CPU host). Use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (newer JAX:
+    the ``jax_num_cpu_devices`` config) to fabricate CPU devices, or
+    run on a real multi-device backend."""
+
+    name = "mesh"
+
+    def __init__(self, devices: Sequence | None = None):
+        self.devices = list(devices) if devices is not None \
+            else list(jax.devices())
+        self._fns: dict = {}
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def devices_for(self, d: ChunkDispatch) -> int:
+        """Largest power-of-two device count that divides the chunk (the
+        plan vocabulary is power-of-two-friendly, so this is normally
+        min(pow2(n_devices), chunk))."""
+        n = 1
+        while n * 2 <= len(self.devices) and d.chunk % (n * 2) == 0:
+            n *= 2
+        return n
+
+    def _fn(self, kind: str, static: tuple, n_dev: int):
+        key = (kind, static, n_dev)
+        fn = self._fns.get(key)
+        if fn is None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            from repro.launch.mesh import make_cell_mesh
+            mesh = make_cell_mesh(self.devices[:n_dev])
+            core = (ratesim._simulate_cells_core if kind == "rate"
+                    else events_batched._simulate_cells_core)
+            sharded = shard_map(functools.partial(core, *static),
+                                mesh=mesh, in_specs=P("cells"),
+                                out_specs=P("cells"), check_rep=False)
+            fn = self._fns[key] = jax.jit(sharded)
+        return fn
+
+    def run(self, d: ChunkDispatch):
+        fn = self._fn(d.kind, d.static, self.devices_for(d))
+        args = _rate_args(d) if d.kind == "rate" else _event_args(d)
+        return fn(*args)
+
+
+_BACKENDS = {"local": LocalBackend, "mesh": MeshBackend}
+_instances: dict[str, Backend] = {}
+
+
+def get_backend(backend: str | Backend | None = None) -> Backend:
+    """Resolve a backend: an instance passes through, a name maps to a
+    cached singleton (so jit caches persist across sweeps), None reads
+    ``BENCH_SWEEP_BACKEND`` (default ``local``)."""
+    if isinstance(backend, Backend):
+        return backend
+    name = backend or os.environ.get(ENV_VAR, "local")
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown sweep backend {name!r} "
+                         f"(expected one of {sorted(_BACKENDS)})")
+    if name not in _instances:
+        _instances[name] = _BACKENDS[name]()
+    return _instances[name]
+
+
+def execute(plan: SweepPlan, backend: str | Backend | None = None):
+    """Run every dispatch of a plan on a backend and scatter the rows
+    back into cell order. Returns `SweepResult` for rate plans,
+    `EventSweepResult` for event plans; both carry ``n_dispatches`` and
+    the backend's ``n_devices`` / per-dispatch device counts."""
+    backend = get_backend(backend)
+    if plan.kind == "rate":
+        return _execute_rate(plan, backend)
+    return _execute_event(plan, backend)
+
+
+def _execute_rate(plan: SweepPlan, backend: Backend) -> SweepResult:
+    n = len(plan.cells)
+    leaves = [np.zeros((n,), np.float64) for _ in Accum._fields]
+    devs = []
+    for d in plan.dispatches:
+        acc = backend.run(d)
+        devs.append(backend.devices_for(d))
+        dest = list(d.cell_idx)
+        for leaf, out in zip(acc, leaves):
+            out[dest] = np.asarray(leaf)[:d.n_real]
+    return SweepResult(plan.cells, Accum(*leaves), plan.work, plan.requests,
+                       n_dispatches=plan.n_dispatches, backend=backend.name,
+                       n_devices=backend.n_devices, dispatch_devices=devs)
+
+
+def _execute_event(plan: SweepPlan, backend: Backend) -> EventSweepResult:
+    out = [None] * len(plan.cells)
+    devs = []
+    for d in plan.dispatches:
+        acc, over = backend.run(d)
+        devs.append(backend.devices_for(d))
+        acc_np = [np.asarray(leaf) for leaf in acc]
+        over_np = np.asarray(over)
+        for r, i in enumerate(d.cell_idx):
+            cell = plan.cells[i]
+            n_req = len(cell.arrival_times)
+            tot = accum_to_totals(Accum(*[leaf[r] for leaf in acc_np]),
+                                  n_req * cell.size_s, n_req)
+            tot.breakdown["slot_overflow"] = int(over_np[r])
+            out[i] = tot
+    return EventSweepResult(plan.cells, out, n_dispatches=plan.n_dispatches,
+                            backend=backend.name,
+                            n_devices=backend.n_devices,
+                            dispatch_devices=devs)

@@ -461,14 +461,15 @@ _simulate = functools.partial(jax.jit, static_argnames=_STATIC_ARGS)(
     _simulate_core)
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC_ARGS)
-def _simulate_cells(policy: str, interval_s: int, spin_up_s: int, n_max: int,
-                    horizon_s: int, counts: jnp.ndarray, size_s,
-                    fs: FleetScalars, energy_weight, headroom,
-                    static_level) -> Accum:
-    """Batched core: every traced argument carries a leading cell axis
-    (counts ``(C, T)``, everything else ``(C,)``, `FleetScalars` leaves
-    ``(C,)``). One dispatch simulates the whole cell batch."""
+def _simulate_cells_core(policy: str, interval_s: int, spin_up_s: int,
+                         n_max: int, horizon_s: int, counts: jnp.ndarray,
+                         size_s, fs: FleetScalars, energy_weight, headroom,
+                         static_level) -> Accum:
+    """Batched core (unjitted): every traced argument carries a leading
+    cell axis (counts ``(C, T)``, everything else ``(C,)``,
+    `FleetScalars` leaves ``(C,)``). Exposed unjitted so
+    `repro.sim.exec.MeshBackend` can `shard_map` it over the cell axis;
+    `_simulate_cells` is its jitted single-device twin."""
 
     def one(c, sz, f, ew, hr, sl):
         return _simulate_core(policy, interval_s, spin_up_s, n_max,
@@ -476,6 +477,11 @@ def _simulate_cells(policy: str, interval_s: int, spin_up_s: int, n_max: int,
 
     return jax.vmap(one)(counts, size_s, fs, energy_weight, headroom,
                          static_level)
+
+
+#: Jitted batched core: one dispatch simulates the whole cell batch.
+_simulate_cells = functools.partial(jax.jit, static_argnames=_STATIC_ARGS)(
+    _simulate_cells_core)
 
 
 def accum_to_totals(acc: Accum, total_work: float, total_requests: int) -> RunTotals:

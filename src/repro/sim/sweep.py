@@ -1,65 +1,56 @@
-"""One-dispatch parameter sweeps over the rate simulator.
+"""One-dispatch parameter sweeps: thin wrappers over plan + execute.
 
 The paper's headline results (Figs. 5-7, Tables 8-9) are parameter-space
 sweeps: spin-up latency x burstiness x policy x trace seed x worker
-parameters. Running each grid cell as its own `ratesim.simulate` call pays
-a full JAX dispatch (and a re-jit per new static shape) per cell. This
-module batches the grid instead:
+parameters. Running each grid cell as its own `ratesim.simulate` (or
+`events.simulate_events`) call pays a full JAX dispatch — and a re-jit
+per new static shape — per cell. This module batches the grid instead,
+as a **plan/execute** pipeline:
 
-  * A `SweepCell` names one grid cell: (policy, trace counts, request
-    size, fleet, energy weight, headroom).
-  * `sweep(cells)` groups the cells by their *static* axes — policy,
-    scheduling interval, spin-up seconds, horizon — and runs each group
-    through `ratesim._simulate_cells`, a single jitted vmap over every
-    traced axis (trace counts, request size, all `FleetScalars` leaves,
-    energy weight, headroom, fpga_static level). One dispatch per group
-    chunk instead of one per cell.
-  * Groups are dispatched in fixed-size chunks (padded with copies of the
-    first cell) so that every (policy, interval, spin-up, horizon) key
-    compiles at most two XLA programs, reused across benchmark suites and
-    — via the persistent compilation cache — across runs. Distinct
-    compiled shapes, not simulated seconds, dominate sweep wall time at
-    benchmark scale.
-  * `tune_fpga_dynamic_cells` expands cells into all headroom levels and
-    selects per cell, batching the paper's §5.1 headroom tuning loop.
-  * Cells may name their demand instead of carrying it: a `SweepCell`
-    (or `EventCell`) with ``scenario=ScenarioSpec(...), seed=k`` and no
-    explicit counts/arrival stream is resolved by `resolve_scenarios`
-    against the `repro.workloads` scenario library — one batched
-    synthesis dispatch per distinct spec — before grouping, so
-    scenario x policy x seed grids are first-class sweep axes.
+  * A `SweepCell` names one rate-simulator grid cell; an
+    `repro.sim.events_batched.EventCell` names one DES cell. Cells may
+    name their demand instead of carrying it (``scenario=spec,
+    seed=k`` against the `repro.workloads` library).
+  * `repro.sim.plan` turns any cell list into an explicit `SweepPlan`:
+    scenario resolution, static-axis group keys, fixed-vocabulary chunk
+    shapes, row-0 padding and result scatter indices — all host-side,
+    all property-tested (tests/test_plan.py).
+  * `repro.sim.exec` runs the plan on a pluggable backend:
+    `LocalBackend` (single-device vmapped dispatches, bit-identical
+    default) or `MeshBackend` (`shard_map` over the cell axis of a
+    device mesh). ``backend=`` threads through every entry point here;
+    None reads the ``BENCH_SWEEP_BACKEND`` env var.
+  * `sweep` / `sweep_events` / `tune_fpga_dynamic_cells` below are the
+    public entry points: plan, execute, and (for tuning) select — no
+    private grouping/padding/dispatch loops of their own.
 
 Equivalence: per-cell totals match per-call `ratesim.simulate` at the
-same `n_max` to float32 tolerance (tests/test_sweep.py).
+same `n_max` to float32 tolerance (tests/test_sweep.py), and the DES
+path matches the `events.EventSim` oracle per the contract in
+docs/architecture.md.
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, replace
-from typing import Any, Iterable, Sequence
+from typing import Any, Iterable
 
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.core.metrics import Report, RunTotals, report
+from repro.core.metrics import RunTotals
 from repro.core.workers import DEFAULT_FLEET, FleetParams
-from repro.sim.events_batched import EventCell, simulate_events_batch
-from repro.sim.ratesim import (Accum, FleetScalars, POLICIES, PREDICTOR_POLICIES,
-                               _simulate_cells, accum_to_totals,
-                               headroom_unit, static_level_for)
+from repro.sim.events_batched import EventCell
+from repro.sim.exec import Backend, execute
+from repro.sim.plan import (CHUNK, CHUNK_BIG, _N_MAX_CAP, EventSweepResult,
+                            SweepPlan, SweepResult, plan_events, plan_sweep,
+                            resolve_scenarios)
+from repro.sim.ratesim import headroom_unit
 
-# Cells per dispatch. Every chunk is padded to one of exactly two shapes
-# (small grids -> CHUNK, expanded grids like headroom tuning -> rounds of
-# CHUNK_BIG) because each distinct compiled shape costs ~0.1-0.3s of
-# compile/loading even when the persistent compilation cache
-# (benchmarks/common.py) hits — shape reuse across suites is worth far
-# more than tight padding: a padded-out simulator cell costs microseconds.
-CHUNK = 32
-CHUNK_BIG = 256
-
-_N_MAX_CAP = 512
+__all__ = [
+    "SweepCell", "EventCell", "SweepResult", "EventSweepResult", "SweepPlan",
+    "sweep", "sweep_events", "tune_fpga_dynamic_cells", "resolve_scenarios",
+    "CHUNK", "CHUNK_BIG",
+]
 
 
 @dataclass(frozen=True)
@@ -69,7 +60,7 @@ class SweepCell:
     Demand comes either from explicit per-second ``counts`` (+ a scalar
     ``size_s``) or from a named workload scenario: pass
     ``scenario=ScenarioSpec(...), seed=k`` (`repro.workloads`) and leave
-    ``counts`` as None — `sweep` synthesizes every scenario-bearing
+    ``counts`` as None — the planner synthesizes every scenario-bearing
     cell's counts (and, if ``size_s`` is None, its request size) in one
     batched device dispatch per spec before grouping, so scenario x
     policy x seed grids are first-class sweep axes."""
@@ -85,207 +76,45 @@ class SweepCell:
     seed: int = 0                 # scenario realization seed
 
 
-@functools.lru_cache(maxsize=256)
-def _fleet_scalars_np(fleet: FleetParams) -> FleetScalars:
-    """FleetScalars leaf values as plain floats. Derived from
-    `FleetScalars.from_fleet` so the fleet-to-scalars mapping has a single
-    source of truth; cached per fleet (hashable frozen dataclass) so
-    sweeps don't pay device round-trips per cell."""
-    return FleetScalars(*(float(leaf)
-                          for leaf in FleetScalars.from_fleet(fleet)))
-
-
-# Policies whose *dynamics* are independent of the scheduling interval and
-# FPGA spin-up latency (cpu_dynamic never allocates FPGAs; fpga_static
-# provisions once, before the trace starts, and charges spin-up through
-# the traced `FleetScalars.A_f_s`). Their cells are regrouped under one
-# canonical static key so every spin-up value shares a compiled program.
-_LATENCY_FREE = ("cpu_dynamic", "fpga_static")
-_CANON_INTERVAL = 10
-
-
-
-def resolve_scenarios(cells: Sequence) -> list:
-    """Materialize demand for scenario-bearing cells (SweepCell or
-    EventCell): cells whose ``counts`` / ``arrival_times`` is None get it
-    synthesized from their ``scenario`` spec — ONE batched device
-    dispatch per distinct spec (`repro.workloads.scenarios.realize`,
-    shared across seeds and cached). Cells with explicit demand pass
-    through untouched; cell order is preserved."""
-    out = list(cells)
-    is_event = [hasattr(c, "arrival_times") for c in out]
-    pending: dict[Any, list[int]] = {}
-    for i, c in enumerate(out):
-        demand = c.arrival_times if is_event[i] else c.counts
-        if demand is not None:
-            continue
-        if c.scenario is None:
-            raise ValueError(
-                f"{type(c).__name__} needs explicit demand or a scenario")
-        pending.setdefault(c.scenario, []).append(i)
-    if not pending:
-        return out
-    from repro.workloads.scenarios import scenario_traces
-    for spec, idxs in pending.items():
-        seeds = sorted({out[i].seed for i in idxs})
-        by_seed = dict(zip(seeds, scenario_traces(spec, seeds)))
-        arrivals: dict[int, np.ndarray] = {}    # one stream per (spec, seed)
-        for i in idxs:
-            c, tr = out[i], by_seed[out[i].seed]
-            size = tr.request_size_s if c.size_s is None else c.size_s
-            if is_event[i]:
-                if c.seed not in arrivals:
-                    arrivals[c.seed] = tr.arrival_times(c.seed)
-                out[i] = replace(c, arrival_times=arrivals[c.seed],
-                                 size_s=size,
-                                 horizon_s=(float(spec.horizon_s)
-                                            if c.horizon_s is None
-                                            else c.horizon_s))
-            else:
-                out[i] = replace(c, counts=tr.counts, size_s=size)
-    return out
-
-
-class SweepResult:
-    """Stacked per-cell `Accum` + conversion to paper-style totals/reports.
-
-    ``n_dispatches`` counts the `_simulate_cells` device dispatches the
-    sweep cost (one per group chunk) — the batching contract benchmarks
-    and tests assert on."""
-
-    def __init__(self, cells: Sequence[SweepCell], accum: Accum,
-                 total_work: np.ndarray, total_requests: np.ndarray,
-                 n_dispatches: int = 0):
-        self.cells = list(cells)
-        self.accum = accum                      # leaves: (n_cells,) np arrays
-        self._work = total_work
-        self._requests = total_requests
-        self.n_dispatches = n_dispatches
-
-    def __len__(self) -> int:
-        return len(self.cells)
-
-    @property
-    def deadline_misses(self) -> np.ndarray:
-        return np.asarray(self.accum.missed_requests)
-
-    def totals(self, i: int) -> RunTotals:
-        one = Accum(*[leaf[i] for leaf in self.accum])
-        return accum_to_totals(one, float(self._work[i]),
-                               int(self._requests[i]))
-
-    def report(self, i: int,
-               reference_fleet: FleetParams | None = None) -> Report:
-        return report(self.totals(i), self.cells[i].fleet,
-                      reference_fleet=reference_fleet)
-
-    def reports(self, reference_fleet: FleetParams | None = None) -> list[Report]:
-        return [self.report(i, reference_fleet) for i in range(len(self))]
-
-
-def _pad(arr: np.ndarray, n: int) -> np.ndarray:
-    """Pad the leading axis to n by repeating row 0 (results discarded)."""
-    if arr.shape[0] == n:
-        return arr
-    reps = np.repeat(arr[:1], n - arr.shape[0], axis=0)
-    return np.concatenate([arr, reps], axis=0)
-
-
-def sweep(cells: Iterable[SweepCell], n_max: int | None = None) -> SweepResult:
+def sweep(cells: Iterable[SweepCell], n_max: int | None = None,
+          backend: str | Backend | None = None) -> SweepResult:
     """Simulate every cell, one dispatch per (policy, interval, spin-up,
     horizon) group chunk. Cell order is preserved in the result.
     Scenario-bearing cells (``counts=None, scenario=spec``) are
-    synthesized first, one batched dispatch per distinct spec."""
-    cells = resolve_scenarios(cells)
-    groups: dict[tuple, list[int]] = {}
-    for i, c in enumerate(cells):
-        if c.policy not in POLICIES:
-            raise ValueError(f"unknown policy {c.policy!r}")
-        interval_s = max(int(round(c.fleet.T_s)), 1)
-        spin_up_s = max(int(round(c.fleet.fpga.spin_up_s)), 1)
-        horizon = (len(c.counts) // interval_s) * interval_s
-        if c.policy in _LATENCY_FREE and horizon % _CANON_INTERVAL == 0:
-            interval_s = spin_up_s = _CANON_INTERVAL
-        groups.setdefault((c.policy, interval_s, spin_up_s, horizon,
-                           n_max or _N_MAX_CAP), []).append(i)
-
-    n = len(cells)
-    leaves = [np.zeros((n,), np.float64) for _ in Accum._fields]
-    work = np.zeros((n,), np.float64)
-    requests = np.zeros((n,), np.int64)
-    n_dispatches = 0
-
-    for (policy, interval_s, spin_up_s, horizon, nm), idxs in groups.items():
-        group = [cells[i] for i in idxs]
-        counts = np.stack([np.asarray(c.counts[:horizon], np.int32)
-                           for c in group])
-        sizes = np.array([c.size_s for c in group], np.float32)
-        ew = np.array([c.energy_weight for c in group], np.float32)
-        hr = np.array([c.headroom for c in group], np.int32)
-        scal = np.array([_fleet_scalars_np(c.fleet) for c in group],
-                        np.float32)     # (C, len(FleetScalars._fields))
-        if policy == "fpga_static":
-            levels = np.array(
-                [static_level_for(c.counts[:horizon], c.size_s, c.fleet, nm)
-                 for c in group], np.int32)
-        else:
-            levels = np.zeros((len(group),), np.int32)
-
-        work[idxs] = counts.sum(1, dtype=np.float64) * sizes
-        requests[idxs] = counts.sum(1, dtype=np.int64)
-
-        start = 0
-        while start < len(group):
-            left = len(group) - start
-            # Spork variants carry O(n_max^2) histogram state per cell, so
-            # they always use the small shape; cheap policies jump to the
-            # big shape for expanded grids (e.g. headroom tuning).
-            if policy in PREDICTOR_POLICIES or left <= CHUNK:
-                chunk = CHUNK
-            else:
-                chunk = CHUNK_BIG
-            sl = slice(start, min(start + chunk, len(group)))
-            start += chunk
-            fs_b = FleetScalars(*[jnp.asarray(_pad(scal[sl, j], chunk))
-                                  for j in range(scal.shape[1])])
-            acc = _simulate_cells(
-                policy, interval_s, spin_up_s, nm, horizon,
-                jnp.asarray(_pad(counts[sl], chunk)),
-                jnp.asarray(_pad(sizes[sl], chunk)), fs_b,
-                jnp.asarray(_pad(ew[sl], chunk)),
-                jnp.asarray(_pad(hr[sl], chunk)),
-                jnp.asarray(_pad(levels[sl], chunk)))
-            n_dispatches += 1
-            got = sl.stop - sl.start
-            dest = idxs[sl.start:sl.start + got]
-            for leaf, out in zip(acc, leaves):
-                out[dest] = np.asarray(leaf)[:got]
-
-    return SweepResult(cells, Accum(*leaves), work, requests,
-                       n_dispatches=n_dispatches)
+    synthesized first, one batched dispatch per distinct spec.
+    ``backend`` selects the `repro.sim.exec` execution backend
+    (None -> ``BENCH_SWEEP_BACKEND`` env var -> local)."""
+    return execute(plan_sweep(cells, n_max=n_max), backend)
 
 
 def sweep_events(cells: Iterable[EventCell], n_max: int = 512,
-                 w_fpga: int = 32, w_cpu: int = 64) -> list[RunTotals]:
+                 w_fpga: int = 32, w_cpu: int = 64,
+                 backend: str | Backend | None = None) -> EventSweepResult:
     """Event-level (DES) cells in sweep grids.
 
     The exact discrete-event counterpart of `sweep`: every `EventCell`
     (dispatcher x arrival trace x fleet x objective) runs on the batched
     `repro.sim.events_batched` engine, grouped by entry-stream shape and
     vmapped, so a whole Table-9-style grid costs a handful of dispatches
-    instead of one serial `events.simulate_events` loop per cell. Cell
-    order is preserved; totals carry ``breakdown['slot_overflow']``
-    (always 0 when the worker-table regions are large enough — see the
-    engine's equivalence contract in docs/architecture.md).
-    Scenario-bearing cells (``arrival_times=None, scenario=spec``) get
-    their arrival streams synthesized first, like `sweep`.
+    instead of one serial `events.simulate_events` loop per cell.
+
+    Returns an `EventSweepResult`: cell-ordered totals (iterable /
+    indexable like the bare list it replaced, or via ``.totals()``)
+    plus the batching-contract metadata — ``n_dispatches``,
+    ``backend``, ``n_devices``. Totals carry
+    ``breakdown['slot_overflow']`` (always 0 when the worker-table
+    regions are large enough — see the engine's equivalence contract in
+    docs/architecture.md). Scenario-bearing cells
+    (``arrival_times=None, scenario=spec``) get their arrival streams
+    synthesized first, like `sweep`.
     """
-    return simulate_events_batch(resolve_scenarios(cells), n_max=n_max,
-                                 w_fpga=w_fpga, w_cpu=w_cpu)
+    plan = plan_events(cells, n_max=n_max, w_fpga=w_fpga, w_cpu=w_cpu)
+    return execute(plan, backend)
 
 
 def tune_fpga_dynamic_cells(cells: Iterable[SweepCell], max_k: int = 16,
                             n_max: int | None = None,
+                            backend: str | Backend | None = None,
                             ) -> list[tuple[int, RunTotals]]:
     """Batched §5.1 headroom tuning: expand every cell into all
     ``max_k + 1`` headroom levels, simulate them in one sweep, and pick
@@ -306,7 +135,7 @@ def tune_fpga_dynamic_cells(cells: Iterable[SweepCell], max_k: int = 16,
         units.append(unit)
         expanded.extend(replace(c, policy="fpga_dynamic", headroom=k * unit)
                         for k in range(K))
-    res = sweep(expanded, n_max=n_max)
+    res = sweep(expanded, n_max=n_max, backend=backend)
     misses = res.deadline_misses.reshape(len(cells), K)
     out = []
     for ci, c in enumerate(cells):

@@ -28,6 +28,7 @@ from __future__ import annotations
 import functools
 import os
 import zlib
+from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Any, NamedTuple, Sequence
 
@@ -311,3 +312,46 @@ def scenario_traces(spec: ScenarioSpec, seeds: Sequence[int]) -> list[Trace]:
         tr.counts = batch.counts[i]
         traces.append(tr)
     return traces
+
+
+# Module-level LRU for per-(spec, seed) event arrival streams, like the
+# `realize` cache above: the stream is a pure function of (spec, seed)
+# (counts fold the seed into the spec's PRNG root independently of the
+# batch tuple, and `Trace.arrival_times` is deterministic in its seed),
+# so repeated planner resolutions of the same event cells — e.g.
+# `tune_fpga_dynamic_cells` then `sweep_events` on one grid — share one
+# computed stream instead of recomputing the host-side placement.
+_ARRIVALS_CACHE: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+# Byte-capped, not entry-capped: paper-scale streams run ~100 MB per
+# (spec, seed), so an entry cap could silently pin gigabytes.
+_ARRIVALS_CACHE_MAX_BYTES = 256 * 1024 * 1024
+_arrivals_cache_bytes = 0
+
+
+def scenario_arrivals(spec: ScenarioSpec, seed: int,
+                      _trace: Trace | None = None) -> np.ndarray:
+    """Cached arrival-time stream for one (spec, seed).
+
+    ``_trace`` lets a caller that already realized the seed batch (the
+    sweep planner's `resolve_scenarios`) donate its `Trace` on a cache
+    miss, so the one-synthesis-dispatch-per-spec contract is preserved;
+    without it a miss realizes the single-seed batch itself."""
+    global _arrivals_cache_bytes
+    key = (spec, int(seed))
+    arr = _ARRIVALS_CACHE.get(key)
+    if arr is None:
+        tr = _trace if _trace is not None \
+            else scenario_traces(spec, (int(seed),))[0]
+        arr = tr.arrival_times(int(seed))
+        # handed out by reference (resolved cells hold the cached array
+        # itself); freeze it so an in-place edit can't poison the cache
+        arr.setflags(write=False)
+        _ARRIVALS_CACHE[key] = arr
+        _arrivals_cache_bytes += arr.nbytes
+        while (_arrivals_cache_bytes > _ARRIVALS_CACHE_MAX_BYTES
+               and len(_ARRIVALS_CACHE) > 1):
+            _, old = _ARRIVALS_CACHE.popitem(last=False)
+            _arrivals_cache_bytes -= old.nbytes
+    else:
+        _ARRIVALS_CACHE.move_to_end(key)
+    return arr

@@ -1,0 +1,224 @@
+"""Plan/execute sweep engine: plan invariants + backend equivalence.
+
+The planning layer (`repro.sim.plan`) is pure host-side data, so its
+contracts are directly assertable:
+
+  * scatter coverage — every plan's ``cell_idx`` lists concatenate to a
+    permutation of ``range(len(cells))``;
+  * padding — padded rows only repeat row 0 of their chunk;
+  * chunk vocabulary — rate chunks are exactly {CHUNK, CHUNK_BIG},
+    event chunks powers of two in [4, EV_CHUNK_MAX].
+
+The execution layer (`repro.sim.exec`) must be interchangeable:
+`MeshBackend` on a forced 2-device CPU host mesh is bit-identical to
+`LocalBackend` (subprocess, like tests/test_distributed.py, so the
+fabricated devices never leak into this process).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim.events_batched import EV_CHUNK_MAX
+from repro.sim.plan import (CHUNK, CHUNK_BIG, EventSweepResult,
+                            plan_events, plan_sweep)
+from repro.sim.sweep import EventCell, SweepCell, sweep, sweep_events
+from repro.sim.exec import LocalBackend, MeshBackend, get_backend
+
+
+def _rate_cells(n_traces=3, horizon=600):
+    traces = [synthetic_trace(seed=s, horizon_s=horizon,
+                              request_size_s=0.05,
+                              mean_demand_workers=20.0)
+              for s in range(n_traces)]
+    slow = DEFAULT_FLEET.replace(fpga=DEFAULT_FLEET.fpga.replace(
+        spin_up_s=60.0))
+    return [SweepCell(policy, tr.counts, 0.05, fleet, energy_weight=ew)
+            for tr in traces
+            for fleet in (DEFAULT_FLEET, slow)
+            for policy, ew in (("spork", 0.5), ("cpu_dynamic", 1.0),
+                               ("fpga_static", 1.0), ("mark_ideal", 1.0))]
+
+
+def _event_cells(n=3):
+    rng = np.random.default_rng(0)
+    return [EventCell(disp, np.sort(rng.uniform(0.0, 60.0, 40 + 10 * k)),
+                      1.0, DEFAULT_FLEET, horizon_s=60.0)
+            for k in range(n)
+            for disp in ("spork", "index_packing", "round_robin")]
+
+
+# ------------------------------------------------------------ plan invariants
+def test_rate_plan_scatter_is_permutation():
+    cells = _rate_cells()
+    plan = plan_sweep(cells)
+    idx = [i for d in plan.dispatches for i in d.cell_idx]
+    assert sorted(idx) == list(range(len(cells)))
+
+
+def test_event_plan_scatter_is_permutation():
+    cells = _event_cells()
+    plan = plan_events(cells, n_max=64, w_fpga=16, w_cpu=32)
+    idx = [i for d in plan.dispatches for i in d.cell_idx]
+    assert sorted(idx) == list(range(len(cells)))
+
+
+@pytest.mark.parametrize("make_plan", [
+    lambda: plan_sweep(_rate_cells()),
+    lambda: plan_events(_event_cells(), n_max=64, w_fpga=16, w_cpu=32),
+], ids=["rate", "event"])
+def test_plan_pads_only_repeat_row0(make_plan):
+    plan = make_plan()
+    for d in plan.dispatches:
+        assert d.n_real <= d.chunk
+        for name, arr in d.arrays.items():
+            assert arr.shape[0] == d.chunk, (name, arr.shape)
+            for r in range(d.n_real, d.chunk):
+                np.testing.assert_array_equal(arr[r], arr[0],
+                                              err_msg=f"{name} row {r}")
+
+
+def test_rate_plan_chunk_vocabulary():
+    # > CHUNK cheap-policy cells in one group forces the big shape
+    tr = synthetic_trace(seed=0, horizon_s=600, request_size_s=0.05,
+                         mean_demand_workers=20.0)
+    cells = _rate_cells() + [
+        SweepCell("fpga_dynamic", tr.counts, 0.05, DEFAULT_FLEET,
+                  headroom=k) for k in range(CHUNK + 1)]
+    plan = plan_sweep(cells)
+    assert {d.chunk for d in plan.dispatches} <= {CHUNK, CHUNK_BIG}
+    assert any(d.chunk == CHUNK_BIG for d in plan.dispatches)
+
+
+def test_event_plan_chunk_vocabulary():
+    plan = plan_events(_event_cells(4), n_max=64, w_fpga=16, w_cpu=32)
+    for d in plan.dispatches:
+        assert 4 <= d.chunk <= EV_CHUNK_MAX
+        assert d.chunk & (d.chunk - 1) == 0, d.chunk     # power of two
+
+
+def test_plan_does_no_device_work():
+    """Planning is host-side: every dispatch array is a numpy array."""
+    for d in plan_sweep(_rate_cells()).dispatches:
+        assert all(isinstance(a, np.ndarray) for a in d.arrays.values())
+
+
+# ------------------------------------------------------------ backend layer
+def test_get_backend_resolution(monkeypatch):
+    monkeypatch.delenv("BENCH_SWEEP_BACKEND", raising=False)
+    assert get_backend().name == "local"
+    assert get_backend("mesh").name == "mesh"
+    monkeypatch.setenv("BENCH_SWEEP_BACKEND", "mesh")
+    assert get_backend().name == "mesh"
+    b = LocalBackend()
+    assert get_backend(b) is b
+    with pytest.raises(ValueError, match="unknown sweep backend"):
+        get_backend("nope")
+
+
+def test_mesh_backend_single_device_matches_local():
+    """On this host's real device list (usually 1 device) the mesh
+    backend must already agree exactly with the local one."""
+    cells = _rate_cells(n_traces=1)
+    loc = sweep(cells, backend=LocalBackend())
+    mesh = sweep(cells, backend=MeshBackend())
+    for a, b in zip(loc.accum, mesh.accum):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert mesh.backend == "mesh"
+    assert mesh.n_dispatches == loc.n_dispatches
+
+
+def test_event_sweep_result_api():
+    cells = _event_cells(1)
+    res = sweep_events(cells, n_max=64, w_fpga=16, w_cpu=32)
+    assert isinstance(res, EventSweepResult)
+    assert len(res) == len(cells)
+    assert res.n_dispatches >= 1
+    assert res.backend in ("local", "mesh")
+    assert res.n_devices >= 1
+    assert list(res) == res.totals()
+    assert res.totals(0) is res[0]
+    assert res[0].requests == len(cells[0].arrival_times)
+    assert res.report(0).energy_efficiency > 0
+
+
+def test_scenario_arrival_streams_cached_across_calls():
+    from repro.sim.plan import resolve_scenarios
+    from repro.workloads import registry
+    spec = registry.get("steady").with_(horizon_s=120,
+                                        mean_demand_workers=5.0)
+    cell = EventCell("spork", fleet=DEFAULT_FLEET, scenario=spec, seed=3)
+    a, = resolve_scenarios([cell])
+    b, = resolve_scenarios([cell])
+    # the module-level (spec, seed) cache must hand back the same array
+    assert a.arrival_times is b.arrival_times
+
+
+_TWO_DEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    os.environ.pop("BENCH_SWEEP_BACKEND", None)
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    assert jax.device_count() == 2, jax.devices()
+    import numpy as np
+    from repro.core.traces import synthetic_trace
+    from repro.core.workers import DEFAULT_FLEET
+    from repro.sim.sweep import SweepCell, EventCell, sweep, sweep_events
+    from repro.sim.exec import LocalBackend, MeshBackend
+    %s
+""")
+
+
+def _run_two_dev(body: str) -> str:
+    script = _TWO_DEV % textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_mesh_backend_bit_identical_on_two_devices():
+    """The acceptance contract: a forced 2-device host mesh must match
+    the local vmapped path EXACTLY — same Accum bits per cell, devices
+    actually used — for both the rate sweep and the DES sweep."""
+    body = """
+    tr = synthetic_trace(seed=0, horizon_s=300, request_size_s=0.05,
+                         mean_demand_workers=20.0)
+    cells = [SweepCell(p, tr.counts, 0.05, DEFAULT_FLEET, energy_weight=w)
+             for p in ("spork", "cpu_dynamic", "fpga_static", "mark_ideal")
+             for w in (1.0, 0.5)]
+    loc = sweep(cells, backend=LocalBackend())
+    mesh = sweep(cells, backend=MeshBackend())
+    assert mesh.n_devices == 2 and set(mesh.dispatch_devices) == {2}, (
+        mesh.n_devices, mesh.dispatch_devices)
+    for f, a, b in zip(loc.accum._fields, loc.accum, mesh.accum):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), f
+
+    rng = np.random.default_rng(0)
+    ecells = [EventCell(d, np.sort(rng.uniform(0.0, 60.0, 50)), 1.0,
+                        DEFAULT_FLEET, horizon_s=60.0)
+              for d in ("spork", "index_packing", "round_robin")]
+    el = sweep_events(ecells, n_max=64, w_fpga=16, w_cpu=32,
+                      backend=LocalBackend())
+    em = sweep_events(ecells, n_max=64, w_fpga=16, w_cpu=32,
+                      backend=MeshBackend())
+    assert set(em.dispatch_devices) == {2}, em.dispatch_devices
+    for ta, tb in zip(el, em):
+        assert ta.energy_j == tb.energy_j
+        assert ta.cost_usd == tb.cost_usd
+        assert ta.requests == tb.requests
+        assert ta.deadline_misses == tb.deadline_misses
+        assert ta.fpga_spinups == tb.fpga_spinups
+    print("MESH_BITWISE_OK")
+    """
+    assert "MESH_BITWISE_OK" in _run_two_dev(body)
