@@ -1,0 +1,147 @@
+"""Chaos suite: failure intensity x dispatch policy degradation curves.
+
+The resilience benchmark for the fault-injection layer
+(`repro.ft.failures`): every chaos scenario in
+`repro.workloads.registry.CHAOS_SCENARIOS` (flaky_fpga, crash_storm,
+straggler_tail, region_evac) runs against three dispatch policies at
+three failure intensities — 0.0, 0.5, 1.0 x the registered
+`FailureSpec` (``spec.failures.scaled(intensity)``) — entirely through
+the batched DES engine (`repro.sim.sweep.sweep_events`).
+
+Two built-in guards (asserted, not just recorded):
+
+  * **zero-failure bit-identity** — every intensity-0.0 cell must
+    produce `RunTotals` bit-identical to a ``failures=None`` baseline
+    cell of the same (scenario, policy, seed); a failure branch that
+    leaks into the disabled path fails the suite, not just a test.
+  * **dispatch budget** — the whole grid (plus baselines) must fit in
+    ``MAX_SWEEP_DISPATCHES``: intensity only changes *traced* scalars,
+    so extra intensities may not add compiled programs.
+
+Rows record per-(scenario, policy, intensity) degradation: deadline-miss
+rate, failure-attributed misses, crashes, retries, recovered requests
+and energy overhead vs the zero-intensity run — the per-policy
+degradation curves `results/BENCH_sweep.json` tracks across PRs.
+
+Fast mode: 2 seeds; full: 6. The 240 s scenario horizon is fixed by the
+registry (chaos entries are sized for CI wall-time ceilings).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# allow `python benchmarks/chaos_suite.py` from anywhere
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import numpy as np
+
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim.sweep import EventCell, sweep_events
+from repro.workloads import registry
+
+from benchmarks.common import FAST, record_kv
+
+POLICIES = [("SporkE", "spork"), ("IndexPack", "index_packing"),
+            ("RoundRobin", "round_robin")]
+INTENSITIES = (0.0, 0.5, 1.0)
+
+# One compiled program per (entry-stream shape, FailStatic) group: the 4
+# scenarios contribute at most 4 padded stream shapes, each appearing
+# under the enabled static key and (for intensity 0 / baseline) the
+# disabled one. Intensities scale traced scalars only, and baselines
+# reuse the intensity-0 group, so the ceiling is 4 shapes x 2 keys.
+MAX_SWEEP_DISPATCHES = 8
+
+#: Fields that must match bit-identically between an intensity-0.0 cell
+#: and its failures=None baseline (everything RunTotals measures).
+_TOTAL_FIELDS = (
+    "energy_j", "cost_usd", "work_cpu_s", "work_on_fpga_cpu_s",
+    "work_on_cpu_cpu_s", "requests", "deadline_misses", "fpga_spinups",
+    "cpu_spinups", "fpga_idle_j", "fpga_busy_j", "cpu_busy_j", "spinup_j",
+    "retries", "failed_spinups", "crashes", "recovered_requests",
+    "failure_misses", "wasted_spinup_j")
+
+
+def run() -> list[dict]:
+    n_seeds = 2 if FAST else 6
+    seeds = tuple(range(n_seeds))
+    fleet = DEFAULT_FLEET
+
+    specs = [registry.get_chaos(name) for name in registry.chaos_names()]
+
+    cells = []
+    for spec in specs:
+        # A cell with ``failures=None`` inherits the scenario's fault
+        # profile (resolve_scenarios), so the true no-failure baseline
+        # strips it from the spec; intensity cells pin scaled overrides.
+        base = spec.with_(failures=None)
+        for label, policy in POLICIES:
+            for s in seeds:
+                cells.append(EventCell(
+                    policy, fleet=fleet, scenario=base, seed=s,
+                    tag=(spec.name, label, "base", s)))
+                cells.extend(EventCell(
+                    policy, fleet=fleet, scenario=spec, seed=s,
+                    failures=spec.failures.scaled(inten),
+                    tag=(spec.name, label, inten, s))
+                    for inten in INTENSITIES)
+
+    res = sweep_events(cells)
+    assert res.n_dispatches <= MAX_SWEEP_DISPATCHES, (
+        f"chaos grid took {res.n_dispatches} sweep dispatches "
+        f"(> {MAX_SWEEP_DISPATCHES}) — did intensity leak into a static "
+        f"group key?")
+
+    by_tag = {cell.tag: res.totals(i) for i, cell in enumerate(res.cells)}
+
+    # Guard: scaled(0.0) must take the failure-free path bit-for-bit.
+    for spec in specs:
+        for label, _ in POLICIES:
+            for s in seeds:
+                base = by_tag[(spec.name, label, "base", s)]
+                zero = by_tag[(spec.name, label, 0.0, s)]
+                for f in _TOTAL_FIELDS:
+                    b, z = getattr(base, f), getattr(zero, f)
+                    assert b == z, (
+                        f"zero-intensity {spec.name}/{label}/seed{s} "
+                        f"diverges from baseline on {f}: {b!r} != {z!r}")
+
+    rows = []
+    for spec in specs:
+        for label, _ in POLICIES:
+            e_base = np.mean([by_tag[(spec.name, label, 0.0, s)].energy_j
+                              for s in seeds])
+            for inten in INTENSITIES:
+                tots = [by_tag[(spec.name, label, inten, s)] for s in seeds]
+                n_req = sum(t.requests for t in tots)
+                rows.append({
+                    "scenario": spec.name, "scheduler": label,
+                    "intensity": inten,
+                    "miss_rate": round(sum(t.deadline_misses for t in tots)
+                                       / max(n_req, 1), 6),
+                    "failure_misses": sum(t.failure_misses for t in tots),
+                    "crashes": sum(t.crashes for t in tots),
+                    "retries": sum(t.retries for t in tots),
+                    "recovered": sum(t.recovered_requests for t in tots),
+                    "energy_x": round(float(np.mean([t.energy_j for t in tots])
+                                            / max(e_base, 1e-9)), 4)})
+
+    record_kv("chaos_suite_meta",
+              scenarios=registry.chaos_names(), n_seeds=n_seeds,
+              intensities=list(INTENSITIES),
+              sweep_dispatches=res.n_dispatches, sweep_cells=len(res),
+              zero_intensity_bit_identical=True, fast=FAST,
+              backend=res.backend, n_devices=res.n_devices,
+              dispatch_devices=res.dispatch_devices)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit, timed
+    rows, t0 = timed(run)
+    emit("chaos_suite", rows, t0)

@@ -19,7 +19,7 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
 
 
 def main() -> None:
-    from benchmarks import (fig2_pareto, fig4_spork_vs_mark,
+    from benchmarks import (chaos_suite, fig2_pareto, fig4_spork_vs_mark,
                             fig5_sensitivity, fig6_worker_efficiency,
                             fig7_request_sizes, roofline, scenario_suite,
                             table8_production, table9_dispatch, warmup)
@@ -31,6 +31,7 @@ def main() -> None:
         ("table8_production", table8_production.run),
         ("table9_dispatch", table9_dispatch.run),
         ("scenario_suite", scenario_suite.run),
+        ("chaos_suite", chaos_suite.run),
         ("fig4_spork_vs_mark", fig4_spork_vs_mark.run),
         ("fig5_sensitivity", fig5_sensitivity.run),
         ("fig6_worker_efficiency", fig6_worker_efficiency.run),

@@ -32,15 +32,25 @@ class RunTotals:
     fpga_busy_j: float = 0.0
     cpu_busy_j: float = 0.0
     spinup_j: float = 0.0
+    # resilience counters (repro.ft.failures.FailureSpec runs; all zero
+    # when the failure axis is off)
+    retries: int = 0                  # spin-up attempts that failed then retried
+    failed_spinups: int = 0           # failed spin-up attempts (incl. stillborn)
+    crashes: int = 0                  # workers lost mid-service
+    recovered_requests: int = 0       # crashed requests served by failover
+    failure_misses: int = 0           # deadline misses attributable to failures
+    wasted_spinup_j: float = 0.0      # energy burned by failed spin-up attempts
     breakdown: dict = field(default_factory=dict)
 
     def merge(self, other: "RunTotals") -> "RunTotals":
         out = RunTotals()
         for f in ("energy_j", "cost_usd", "work_cpu_s", "work_on_fpga_cpu_s",
                   "work_on_cpu_cpu_s", "fpga_idle_j", "fpga_busy_j",
-                  "cpu_busy_j", "spinup_j"):
+                  "cpu_busy_j", "spinup_j", "wasted_spinup_j"):
             setattr(out, f, getattr(self, f) + getattr(other, f))
-        for f in ("requests", "deadline_misses", "fpga_spinups", "cpu_spinups"):
+        for f in ("requests", "deadline_misses", "fpga_spinups", "cpu_spinups",
+                  "retries", "failed_spinups", "crashes",
+                  "recovered_requests", "failure_misses"):
             setattr(out, f, getattr(self, f) + getattr(other, f))
         return out
 

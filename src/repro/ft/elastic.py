@@ -30,9 +30,19 @@ import jax
 
 def shrink_mesh(devices, model_width: int):
     """Largest (data, model) mesh from `devices` keeping model_width if
-    possible. Returns (mesh, dropped_count)."""
+    possible; with fewer survivors than `model_width` it falls back to
+    the widest power-of-two model axis that still fits (down to a 1-wide
+    mesh for a single survivor). Returns (mesh, dropped_count).
+
+    Raises ValueError when `devices` is empty or `model_width < 1` —
+    there is no well-formed mesh to shrink to, and reshaping an empty
+    array would produce a silently unusable (0, width) mesh."""
     devices = list(devices)
     n = len(devices)
+    if n == 0:
+        raise ValueError("shrink_mesh: no surviving devices")
+    if model_width < 1:
+        raise ValueError(f"shrink_mesh: model_width={model_width} < 1")
     width = model_width
     while width > 1 and n // width == 0:
         width //= 2
@@ -41,6 +51,16 @@ def shrink_mesh(devices, model_width: int):
     arr = np.array(devices[:used]).reshape(data, width)
     from jax.sharding import Mesh
     return Mesh(arr, ("data", "model")), n - used
+
+
+def surviving(ids, is_dead) -> list:
+    """Worker-table analog of `shrink_mesh`'s survivor filter: keep the
+    order of `ids`, drop every id `is_dead` flags. The DES allocator
+    (`repro.sim.events.EventSim._live_fpgas`) uses this to count the
+    shrunken live fleet during failures/evacuations, then re-provisions
+    the shortfall — the same shrink-then-reprovision contract the mesh
+    path implements for training."""
+    return [i for i in ids if not is_dead(i)]
 
 
 class StragglerPolicy:

@@ -19,6 +19,25 @@ their last queued request). For identical-size requests this single order
 simultaneously encodes "busiest-first" among busy workers and
 "least-idle-first" among idle workers, so dispatch is a bisect, keeping
 the engine fast enough for production-scale traces at reduced load.
+
+Fault model (``failures=`` `repro.ft.failures.FailureSpec`): this engine
+is the exact oracle for the failure semantics too — spin-up attempts fail
+with probability p (bounded retries with backoff; an allocation whose
+attempts are exhausted is *stillborn*: its energy and cost are wasted and
+it never joins the fleet), assignments crash mid-service with probability
+``crash_p`` (the worker dies half a service in, the request re-enters
+dispatch at the same timestamp with its *original* deadline for up to
+``max_failover`` extra rounds — deadline-aware failover through the same
+CanMeetDeadline feasibility checks — and is dropped as an SLO violation
+when the rounds run out), hash-drawn stragglers serve ``factor``x slower,
+and an optional evacuation window masks a hash-drawn subset out of
+dispatch and out of the allocator's live-fleet count (they drain and idle
+out; `repro.ft.elastic.surviving` filters the id lists, the allocator
+re-provisions the shortfall). Every draw comes from the counter-based
+`repro.ft.failures.failure_u01` stream keyed (seed, wid, counter,
+purpose), so `repro.sim.events_batched` consumes identical randomness.
+With ``failures=None`` (or an all-zero spec) every code path below is the
+pre-failure-model one, bit for bit.
 """
 
 from __future__ import annotations
@@ -33,6 +52,9 @@ from repro.core.breakeven import objective_setup
 from repro.core.metrics import RunTotals
 from repro.core.predictor import Predictor
 from repro.core.workers import FleetParams
+from repro.ft.elastic import surviving
+from repro.ft.failures import (DRAW_CRASH, DRAW_EVAC, DRAW_SPINUP,
+                               DRAW_STRAGGLE, FailureSpec, failure_u01)
 
 DISPATCHERS = ("spork", "index_packing", "round_robin")
 
@@ -49,6 +71,11 @@ class _Worker:
     dealloc_t: float = -1.0
     idle_mark: float = -1.0      # idle_since for the timeout check
     last_assign_t: float = -1.0
+    # failure-model state (inert defaults when failures are off)
+    n_fail: int = 0              # failed spin-up attempts before success
+    slow: float = 1.0            # straggler service-time multiplier
+    evac: bool = False           # member of the hash-drawn evacuated set
+    n_assigned: int = 0          # assignment count (crash-draw counter)
 
 
 class EventSim:
@@ -57,10 +84,12 @@ class EventSim:
     def __init__(self, fleet: FleetParams, size_s: float,
                  dispatcher: str = "spork", energy_weight: float = 1.0,
                  deadline_s: float | None = None, n_max: int = 512,
-                 allocate_fpgas: bool = True):
+                 allocate_fpgas: bool = True,
+                 failures: FailureSpec | None = None):
         assert dispatcher in DISPATCHERS
         self.fleet = fleet
         self.size = size_s
+        self.failures = failures.normalized() if failures is not None else None
         self.deadline = 10.0 * size_s if deadline_s is None else deadline_s
         self.dispatcher = dispatcher
         self.allocate_fpgas = allocate_fpgas
@@ -90,12 +119,45 @@ class EventSim:
         heapq.heappush(self.events, (t, self._seq, kind, payload))
 
     # ---------- worker lifecycle ----------
-    def _spin_up(self, kind: str, queued_first_req: bool = False) -> _Worker:
+    def _spin_up(self, kind: str, level: int | None = None) -> _Worker | None:
+        """Allocate a worker; under the failure model each attempt fails
+        with probability spinup_fail_p (counter-based draw per attempt),
+        bounded by max_retries with retry_backoff_s between attempts.
+        Returns None for a stillborn allocation (all attempts failed):
+        its wid is consumed and its energy/cost wasted, but it never
+        joins the fleet."""
         spec = self.fleet.fpga if kind == "fpga" else self.fleet.cpu
+        f = self.failures
         self._wid += 1
-        w = _Worker(self._wid, kind, alloc_t=self.now,
-                    ready_at=self.now + spec.spin_up_s,
-                    level_at_alloc=self._allocated(kind))
+        lvl = self._allocated(kind) if level is None else level
+        if f is None:
+            ready_at = self.now + spec.spin_up_s
+            n_fail = 0
+        else:
+            p = np.float32(f.spinup_fail_p)
+            R = f.max_retries
+            n_fail = 0
+            while (n_fail <= R and
+                   failure_u01(f.seed, self._wid, n_fail, DRAW_SPINUP) < p):
+                n_fail += 1
+            self.totals.failed_spinups += n_fail
+            self.totals.retries += min(n_fail, R)
+            self.totals.wasted_spinup_j += n_fail * spec.spin_up_energy_j
+            if n_fail > R:       # stillborn: occupied for every attempt
+                dur = (R + 1) * spec.spin_up_s + R * f.retry_backoff_s
+                self.totals.cost_usd += dur * spec.cost_per_s
+                return None
+            ready_at = (self.now + spec.spin_up_s * (1 + n_fail)
+                        + f.retry_backoff_s * n_fail)
+        w = _Worker(self._wid, kind, alloc_t=self.now, ready_at=ready_at,
+                    level_at_alloc=lvl)
+        w.n_fail = n_fail
+        if f is not None:
+            w.slow = (f.straggler_factor
+                      if failure_u01(f.seed, w.wid, 0, DRAW_STRAGGLE)
+                      < np.float32(f.straggler_frac) else 1.0)
+            w.evac = bool(failure_u01(f.seed, w.wid, 0, DRAW_EVAC)
+                          < np.float32(f.evac_frac))
         w.available_at = w.ready_at
         self.workers[w.wid] = w
         self.pending[kind].append(w.wid)
@@ -109,6 +171,24 @@ class EventSim:
     def _allocated(self, kind: str) -> int:
         return len(self.order[kind]) + len(self.pending[kind])
 
+    def _evac_now(self, w: _Worker) -> bool:
+        f = self.failures
+        return (f is not None and w.evac
+                and f.evac_start_s <= self.now < f.evac_end_s)
+
+    def _live_fpgas(self) -> int:
+        """Allocator-visible FPGA count: the shrunken live fleet.
+        Crashed workers are already off the lists; an active evacuation
+        window hides its hash-drawn subset (`ft.elastic.surviving`
+        adapted from device meshes to worker-id lists), so the predictor
+        re-provisions the shortfall."""
+        if self.failures is None:
+            return self._allocated("fpga")
+        ids = ([wid for _, wid in self.order["fpga"]]
+               + list(self.pending["fpga"]))
+        return len(surviving(
+            ids, lambda wid: self._evac_now(self.workers[wid])))
+
     def _on_ready(self, wid: int) -> None:
         w = self.workers.get(wid)
         if w is None or w.dealloc_t >= 0:
@@ -119,7 +199,10 @@ class EventSim:
             # The RR ring cycles over the provisioned fleet; dispatch-path
             # CPUs stay burst-only (otherwise RR keeps resurrecting them
             # forever, which no real deployment would tolerate; see DESIGN).
-            self.rr_ring.append(wid)
+            # Kept wid-sorted: without failures ready order IS wid order
+            # (identical spin-up delay), with retry-delayed spin-ups the
+            # insort preserves the batched engine's wid-ascending ring.
+            insort(self.rr_ring, wid)
         if w.available_at <= self.now:
             self._mark_idle(w)
 
@@ -156,6 +239,10 @@ class EventSim:
     def _service(self, kind: str) -> float:
         return self.size / (self.fleet.S if kind == "fpga" else 1.0)
 
+    def _service_w(self, w: _Worker) -> float:
+        """Per-worker service time (stragglers serve at rate/factor)."""
+        return self._service(w.kind) * w.slow
+
     def _try_type(self, kind: str) -> _Worker | None:
         slack = self.now + self.deadline - self._service(kind)
         lst = self.order[kind]
@@ -180,7 +267,36 @@ class EventSim:
                     best = w
         return best
 
+    def _try_type_f(self, kind: str) -> _Worker | None:
+        """Failure-aware `_try_type`: a linear scan instead of the bisect
+        — per-worker straggler factors make feasibility non-monotone in
+        ``available_at`` and evacuated workers must be skipped. Tie-breaks
+        replicate the bisect exactly (ready: max (available_at, wid);
+        pending: most queued load, first listed = min wid)."""
+        dl = self.now + self.deadline
+        best = None
+        for avail, wid in self.order[kind]:
+            w = self.workers[wid]
+            if self._evac_now(w):
+                continue
+            if avail <= dl - self._service_w(w):
+                if best is None or (avail, wid) > (best.available_at,
+                                                   best.wid):
+                    best = w
+        if best is not None:
+            return best
+        for wid in self.pending[kind]:
+            w = self.workers[wid]
+            if self._evac_now(w):
+                continue
+            if w.available_at + self._service_w(w) <= dl:
+                if best is None or w.available_at > best.available_at:
+                    best = w
+        return best
+
     def _find_worker(self) -> _Worker | None:
+        if self.failures is not None:
+            return self._find_worker_f()
         if self.dispatcher == "spork":
             return self._try_type("fpga") or self._try_type("cpu")
         if self.dispatcher == "index_packing":
@@ -199,8 +315,33 @@ class EventSim:
                 return w
         return self._try_type("cpu")
 
-    def _assign(self, w: _Worker) -> None:
-        service = self._service(w.kind)
+    def _find_worker_f(self) -> _Worker | None:
+        """Failure-aware `_find_worker`: same policy rules over the
+        failure-aware candidate search. Evacuated workers keep their ring
+        *positions* (the cursor cycles over the provisioned ring) but are
+        skipped as infeasible, exactly like the batched engine's
+        feasibility mask."""
+        if self.dispatcher == "spork":
+            return self._try_type_f("fpga") or self._try_type_f("cpu")
+        if self.dispatcher == "index_packing":
+            a, b = self._try_type_f("fpga"), self._try_type_f("cpu")
+            if a and b:
+                return a if a.available_at >= b.available_at else b
+            return a or b
+        n = len(self.rr_ring)
+        for k in range(n):
+            wid = self.rr_ring[(self.rr_pos + k) % n]
+            w = self.workers[wid]
+            if self._evac_now(w):
+                continue
+            slack = self.now + self.deadline - self._service_w(w)
+            if max(w.available_at, self.now) <= slack:
+                self.rr_pos = (self.rr_pos + k + 1) % n
+                return w
+        return self._try_type_f("cpu")
+
+    def _assign(self, w: _Worker) -> bool:
+        service = self._service_w(w)
         start = max(w.available_at, self.now)
         in_order = w.dealloc_t < 0 and w.ready_at <= self.now
         if in_order:
@@ -221,18 +362,85 @@ class EventSim:
             self.F_acc += service
             self.totals.work_on_fpga_cpu_s += self.size
         else:
-            self.C_acc += self.size
+            # interval load is *occupancy*: equals self.size unless the
+            # worker is a straggler (service == size/1.0 when slow == 1)
+            self.C_acc += service
             self.totals.work_on_cpu_cpu_s += self.size
         if w.available_at > self.now + self.deadline + 1e-9:
             self.misses += 1
+            return True
+        return False
+
+    def _crash(self, w: _Worker) -> None:
+        """Mid-service crash: the worker dies half a service in. It burns
+        half the service as busy time / interval load, leaves dispatch
+        immediately, and its lifetime settles (for the predictor's
+        per-level stats) only when the crash time is *reached* — ticks
+        between the crash draw and the crash time must see the
+        pre-crash predictor state, matching the batched engine's lazy
+        settlement."""
+        service = self._service_w(w)
+        t_crash = max(w.available_at, self.now) + service / 2.0
+        self.totals.crashes += 1
+        w.busy_s += service / 2.0
+        if w.kind == "fpga":
+            self.F_acc += service / 2.0
+        else:
+            self.C_acc += service / 2.0
+        try:
+            self.order[w.kind].remove((w.available_at, w.wid))
+        except ValueError:
+            pass
+        if w.wid in self.pending[w.kind]:
+            self.pending[w.kind].remove(w.wid)
+        if w.wid in self.rr_ring:
+            self.rr_ring.remove(w.wid)
+        w.dealloc_t = t_crash    # future-dated: every guard treats it as gone
+        if w.kind == "fpga":
+            self._push(t_crash, "crash_settle", w.wid)
+
+    def _on_crash_settle(self, wid: int) -> None:
+        w = self.workers[wid]
+        self.predictor.record_lifetime(w.level_at_alloc,
+                                       self.now - w.alloc_t)
 
     def _on_arrival(self) -> None:
         self.totals.requests += 1
         self.totals.work_cpu_s += self.size
-        w = self._find_worker()
-        if w is None:
-            w = self._spin_up("cpu")
-        self._assign(w)
+        f = self.failures
+        if f is None:
+            w = self._find_worker()
+            if w is None:
+                w = self._spin_up("cpu")
+            self._assign(w)
+            return
+        # deadline-aware failover: up to 1 + max_failover dispatch rounds
+        # at this timestamp, each with the request's ORIGINAL deadline. A
+        # round is consumed by a stillborn burst spin-up or a crash; when
+        # the rounds run out the request is dropped (an SLO violation
+        # attributable to failures).
+        crash_p = np.float32(f.crash_p)
+        crashed_any = False
+        for r in range(1 + f.max_failover):
+            w = self._find_worker()
+            if w is None:
+                w = self._spin_up("cpu")
+                if w is None:        # stillborn burst CPU
+                    continue
+            u = failure_u01(f.seed, w.wid, w.n_assigned, DRAW_CRASH)
+            w.n_assigned += 1
+            if u < crash_p:
+                self._crash(w)
+                crashed_any = True
+                continue
+            missed = self._assign(w)
+            if crashed_any:
+                self.totals.recovered_requests += 1
+            if missed and r > 0:
+                self.totals.failure_misses += 1
+            return
+        self.misses += 1
+        self.totals.failure_misses += 1
 
     def _on_complete(self, wid: int) -> None:
         w = self.workers.get(wid)
@@ -254,12 +462,23 @@ class EventSim:
         n_needed = min(n, self.n_max - 1)
         self.predictor.observe(self.n_lag[1], n_needed)
         self.n_lag = [n_needed, self.n_lag[0]]
-        n_curr = self._allocated("fpga")
+        n_curr = self._live_fpgas()
         target = self.predictor.predict(n_needed, n_curr)
-        for _ in range(max(0, target - n_curr)):
-            if self._allocated("fpga") >= self.fleet.max_fpgas:
-                break
-            self._spin_up("fpga")
+        if self.failures is None:
+            for _ in range(max(0, target - n_curr)):
+                if self._allocated("fpga") >= self.fleet.max_fpgas:
+                    break
+                self._spin_up("fpga")
+        else:
+            # attempt count fixed up front (a stillborn attempt must not
+            # grant an extra iteration) and allocation levels assigned by
+            # attempt index — both match the batched engine's single
+            # clip + cumsum; identical to the loop above when no spin-up
+            # can fail.
+            m = max(0, min(target - n_curr,
+                           max(self.fleet.max_fpgas - n_curr, 0)))
+            for j in range(m):
+                self._spin_up("fpga", level=n_curr + j)
         self.F_acc = self.C_acc = 0.0
 
     # ---------- main loop ----------
@@ -271,6 +490,8 @@ class EventSim:
             self._on_complete(payload)
         elif kind == "idle_check":
             self._on_idle_check(payload)
+        elif kind == "crash_settle":
+            self._on_crash_settle(payload)
         elif kind == "tick":
             if self.now < horizon_s:
                 self._on_tick()
@@ -317,7 +538,7 @@ class EventSim:
                 horizon_s, w.available_at)
             life = max(end - w.alloc_t, 0.0)
             busy = w.busy_s
-            spin = spec.spin_up_s
+            spin = spec.spin_up_s * (1 + w.n_fail)   # backoff gaps stay idle
             idle = max(life - busy - spin, 0.0)
             busy_j = busy * spec.busy_w
             idle_j = idle * spec.idle_w
@@ -330,6 +551,7 @@ class EventSim:
             else:
                 tot.cpu_busy_j += busy_j
             tot.spinup_j += spin_j
+        tot.energy_j += tot.wasted_spinup_j
         tot.deadline_misses = self.misses
         return tot
 
@@ -338,11 +560,13 @@ def simulate_events(arrival_times: np.ndarray, size_s: float,
                     fleet: FleetParams, dispatcher: str = "spork",
                     energy_weight: float = 1.0, horizon_s: float | None = None,
                     deadline_s: float | None = None,
-                    allocate_fpgas: bool = True, n_max: int = 512) -> RunTotals:
+                    allocate_fpgas: bool = True, n_max: int = 512,
+                    failures: FailureSpec | None = None) -> RunTotals:
     """Convenience wrapper: one app, one policy, exact DES."""
     horizon = float(horizon_s if horizon_s is not None
                     else (arrival_times[-1] + 1.0 if len(arrival_times) else 1.0))
     sim = EventSim(fleet, size_s, dispatcher=dispatcher,
                    energy_weight=energy_weight, deadline_s=deadline_s,
-                   n_max=n_max, allocate_fpgas=allocate_fpgas)
+                   n_max=n_max, allocate_fpgas=allocate_fpgas,
+                   failures=failures)
     return sim.run(np.asarray(arrival_times, dtype=np.float64), horizon)

@@ -62,11 +62,15 @@ def _rate_args(d: ChunkDispatch) -> tuple:
 
 
 def _event_args(d: ChunkDispatch) -> tuple:
-    """Traced arguments for `events_batched._simulate_cells`, in order."""
+    """Traced arguments for `events_batched._simulate_cells`, in order.
+    The ``scalars`` matrix holds every float field of `EventScalars`
+    (incl. the 8 traced failure knobs); the uint32 hash seed and the
+    int/bool fields ride as separate arrays."""
     a = d.arrays
     es = events_batched.EventScalars(
         *(jnp.asarray(a["scalars"][:, j])
           for j in range(a["scalars"].shape[1])),
+        f_seed=jnp.asarray(a["fail_seed"]),
         max_fpgas=jnp.asarray(a["max_fpgas"]),
         allocate=jnp.asarray(a["allocate"]))
     return (es, jnp.asarray(a["codes"]), jnp.asarray(a["times"]),
@@ -210,15 +214,28 @@ def _execute_event(plan: SweepPlan, backend: Backend) -> EventSweepResult:
     out = [None] * len(plan.cells)
     devs = []
     for d in plan.dispatches:
-        acc, over = backend.run(d)
+        acc, fail, over = backend.run(d)
         devs.append(backend.devices_for(d))
         acc_np = [np.asarray(leaf) for leaf in acc]
+        fail_np = [np.asarray(leaf) for leaf in fail]
         over_np = np.asarray(over)
         for r, i in enumerate(d.cell_idx):
             cell = plan.cells[i]
             n_req = len(cell.arrival_times)
             tot = accum_to_totals(Accum(*[leaf[r] for leaf in acc_np]),
                                   n_req * cell.size_s, n_req)
+            fl = events_batched.FailAcc(*[leaf[r] for leaf in fail_np])
+            # resilience counters + the oracle's finalize composition:
+            # wasted spin-up energy joins energy_j, stillborn occupancy
+            # joins cost_usd (all exactly zero when the axis is off)
+            tot.retries = int(fl.retries)
+            tot.failed_spinups = int(fl.failed_spins)
+            tot.crashes = int(fl.crashes)
+            tot.recovered_requests = int(fl.recovered)
+            tot.failure_misses = int(fl.fail_misses)
+            tot.wasted_spinup_j = float(fl.wasted_j)
+            tot.energy_j += float(fl.wasted_j)
+            tot.cost_usd += float(fl.extra_cost)
             tot.breakdown["slot_overflow"] = int(over_np[r])
             out[i] = tot
     return EventSweepResult(plan.cells, out, n_dispatches=plan.n_dispatches,

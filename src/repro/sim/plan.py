@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core.metrics import Report, RunTotals, report
 from repro.core.workers import FleetParams
+from repro.ft.failures import fail_static
 from repro.sim.events_batched import (BLOCK, DISPATCH_CODES, EV_CHUNK_MAX,
                                       _entries, _pad_pow2, _scalars)
 from repro.sim.ratesim import (Accum, FleetScalars, POLICIES,
@@ -118,6 +119,10 @@ def resolve_scenarios(cells: Sequence) -> list:
         for i in idxs:
             c, tr = out[i], by_seed[out[i].seed]
             size = tr.request_size_s if c.size_s is None else c.size_s
+            # chaos scenarios carry a fault model; cells inherit it
+            # unless they pin their own
+            fail = (c.failures if c.failures is not None
+                    else getattr(spec, "failures", None))
             if is_event[i]:
                 out[i] = replace(c,
                                  arrival_times=scenario_arrivals(
@@ -125,9 +130,11 @@ def resolve_scenarios(cells: Sequence) -> list:
                                  size_s=size,
                                  horizon_s=(float(spec.horizon_s)
                                             if c.horizon_s is None
-                                            else c.horizon_s))
+                                            else c.horizon_s),
+                                 failures=fail)
             else:
-                out[i] = replace(c, counts=tr.counts, size_s=size)
+                out[i] = replace(c, counts=tr.counts, size_s=size,
+                                 failures=fail)
     return out
 
 
@@ -181,8 +188,20 @@ def plan_sweep(cells: Iterable, n_max: int | None = None) -> SweepPlan:
     """Plan a rate-simulator sweep: one `ChunkDispatch` per (policy,
     interval, spin-up, horizon) group chunk, arrays laid out exactly as
     `ratesim._simulate_cells` consumes them. Scenario-bearing cells are
-    resolved first (one synthesis dispatch per distinct spec)."""
-    cells = resolve_scenarios(cells)
+    resolved first (one synthesis dispatch per distinct spec).
+
+    The rate simulator has no per-worker identity, so failure-bearing
+    cells are *fluidized* here: `FailureSpec.degrade_fleet` folds the
+    expected failure overheads into the fleet parameters and the cell's
+    ``failures`` is cleared (the plan's cells record what was actually
+    simulated; re-planning them will not degrade twice). The DES engines
+    are the exact path — docs/architecture.md §Failure model."""
+    cells = [
+        c if getattr(c, "failures", None) is None
+        or c.failures.normalized() is None
+        else replace(c, fleet=c.failures.degrade_fleet(c.fleet),
+                     failures=None)
+        for c in resolve_scenarios(cells)]
     groups: dict[tuple, list[int]] = {}
     for i, c in enumerate(cells):
         if c.policy not in POLICIES:
@@ -274,7 +293,7 @@ def plan_events(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
                 "size_s); scenario-bearing cells must go through "
                 "repro.sim.sweep.sweep_events, which resolves them")
     entries: dict[int, list] = {}
-    groups: dict[int, list[int]] = {}
+    groups: dict[tuple, list[int]] = {}
     for i, cl in enumerate(cells):
         arr = np.asarray(cl.arrival_times, np.float64)
         horizon = float(cl.horizon_s if cl.horizon_s is not None
@@ -286,10 +305,12 @@ def plan_events(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
         # padding beats shape reuse once streams are long.
         E = (_pad_pow2(n_e, lo=4) if n_e <= 256
              else 256 * int(math.ceil(n_e / 256)))
-        groups.setdefault(E, []).append(i)
+        # the failure axis's static part joins the group key: disabled
+        # cells compile (and stay on) the pristine pre-failure program
+        groups.setdefault((E, fail_static(cl.failures)), []).append(i)
 
     dispatches: list[ChunkDispatch] = []
-    for E, idxs in groups.items():
+    for (E, fstat), idxs in groups.items():
         chunk = _pad_pow2(len(idxs), lo=4, hi=EV_CHUNK_MAX)
         start = 0
         while start < len(idxs):
@@ -308,6 +329,10 @@ def plan_events(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
             arrays = {
                 "scalars": np.array([_scalars(cells[i])[:-2] for i in pad],
                                     np.float32),
+                "fail_seed": np.array(
+                    [(cells[i].failures.seed
+                      if cells[i].failures is not None else 0)
+                     for i in pad], np.uint32),
                 "max_fpgas": np.array([cells[i].fleet.max_fpgas
                                        for i in pad], np.int32),
                 "allocate": np.array([cells[i].allocate_fpgas
@@ -317,7 +342,7 @@ def plan_events(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
                 "times": times, "tick_t": tick_t, "is_tick": is_tick,
             }
             dispatches.append(ChunkDispatch(
-                kind="event", static=(n_max, w_fpga, w_cpu),
+                kind="event", static=(n_max, w_fpga, w_cpu, fstat),
                 arrays=arrays, cell_idx=tuple(sl), chunk=chunk))
 
     return SweepPlan("event", cells, dispatches, n_max)

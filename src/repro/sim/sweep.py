@@ -74,6 +74,8 @@ class SweepCell:
     tag: Any = None               # caller's join key; carried through
     scenario: Any = None          # repro.workloads.ScenarioSpec | None
     seed: int = 0                 # scenario realization seed
+    failures: Any = None          # repro.ft.failures.FailureSpec | None;
+                                  # fluidized by plan_sweep (degrade_fleet)
 
 
 def sweep(cells: Iterable[SweepCell], n_max: int | None = None,

@@ -24,6 +24,7 @@ remain in `repro.workloads.scenarios.production_like_apps`.
 
 from __future__ import annotations
 
+from repro.ft.failures import FailureSpec
 from repro.workloads.scenarios import SOURCE_BIAS, ScenarioSpec
 
 SCENARIOS: dict[str, ScenarioSpec] = {}
@@ -94,3 +95,76 @@ register(ScenarioSpec(
     name="csv_replay", kind="replay", mean_demand_workers=80.0,
     params=(("path", "sample_trace.csv"), ("stats_agg_s", 10)),
     expect=(("peak_to_mean", 1.5, 4.0), ("autocorr_60", 0.3, 1.0))))
+
+
+# ------------------------------------------------------- chaos scenarios
+#
+# Fault-injection profiles for the resilience benchmarks
+# (benchmarks/chaos_suite.py): each entry pairs a short-horizon workload
+# shape with a `repro.ft.failures.FailureSpec` at FULL intensity — the
+# suite sweeps ``spec.failures.scaled(intensity)`` per cell, so the
+# registered spec is the worst case, not the only case. Kept in a
+# separate registry so `names()` (the scenario_suite contract — 8
+# entries, <= 3 sweep dispatches) is unchanged. Failure rates are
+# STAND-INS chosen to exercise every recovery path within a 240 s
+# horizon, not literature-derived (docs/EXPERIMENTS.md §Failure rates).
+# Expect ranges are calibrated at 240 s / ``stats_agg_s=10`` like the
+# main library; `tests/test_ft.py` validates every chaos entry.
+
+CHAOS_SCENARIOS: dict[str, ScenarioSpec] = {}
+
+
+def register_chaos(spec: ScenarioSpec) -> ScenarioSpec:
+    if spec.name in CHAOS_SCENARIOS or spec.name in SCENARIOS:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    if spec.failures is None:
+        raise ValueError(f"chaos scenario {spec.name!r} needs a FailureSpec")
+    CHAOS_SCENARIOS[spec.name] = spec
+    return spec
+
+
+def get_chaos(name: str) -> ScenarioSpec:
+    try:
+        return CHAOS_SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown chaos scenario {name!r}; "
+                       f"known: {', '.join(chaos_names())}") from None
+
+
+def chaos_names() -> list[str]:
+    return sorted(CHAOS_SCENARIOS)
+
+
+register_chaos(ScenarioSpec(
+    name="flaky_fpga", kind="diurnal", horizon_s=240,
+    request_size_s=1.0, mean_demand_workers=12.0,
+    params=(("amp1", 0.0), ("amp2", 0.0), ("noise", 0.05),
+            ("stats_agg_s", 10)),
+    expect=(("peak_to_mean", 1.0, 1.5), ("cv", 0.0, 0.2)),
+    failures=FailureSpec(spinup_fail_p=0.25, max_retries=2,
+                         retry_backoff_s=2.0, seed=11)))
+
+register_chaos(ScenarioSpec(
+    name="crash_storm", kind="bmodel", horizon_s=240,
+    request_size_s=1.0, mean_demand_workers=12.0,
+    params=(("bias", 0.68), ("stats_agg_s", 10)),
+    expect=(("peak_to_mean", 1.3, 12.0),),
+    failures=FailureSpec(crash_p=0.08, max_failover=2, seed=23)))
+
+register_chaos(ScenarioSpec(
+    name="straggler_tail", kind="heavy_tail", horizon_s=240,
+    request_size_s=1.0, mean_demand_workers=12.0,
+    params=(("bias", 0.58), ("alpha", 1.6), ("x_min_s", 0.400),
+            ("cap_s", 4.0), ("stats_agg_s", 10)),
+    expect=(("peak_to_mean", 1.2, 15.0),),
+    failures=FailureSpec(straggler_frac=0.25, straggler_factor=4.0,
+                         seed=37)))
+
+register_chaos(ScenarioSpec(
+    name="region_evac", kind="diurnal", horizon_s=240,
+    request_size_s=1.0, mean_demand_workers=12.0,
+    params=(("period_frac", 1.0), ("amp1", 0.4), ("amp2", 0.1),
+            ("noise", 0.05), ("stats_agg_s", 10)),
+    expect=(("peak_to_mean", 1.1, 2.5),),
+    failures=FailureSpec(evac_start_s=80.0, evac_end_s=160.0,
+                         evac_frac=0.5, crash_p=0.02, seed=53)))

@@ -171,6 +171,9 @@ class ScenarioSpec:
     spec hashable: ``params`` holds ``(key, value)`` generator arguments,
     ``expect`` holds ``(stat_name, lo, hi)`` ranges that
     `repro.workloads.stats.validate` checks on every realized batch.
+    ``failures`` (a frozen `repro.ft.failures.FailureSpec`, or None)
+    attaches a fault-injection profile: sweep cells that name this
+    scenario inherit it unless they pin their own (`resolve_scenarios`).
     """
 
     name: str
@@ -180,6 +183,7 @@ class ScenarioSpec:
     mean_demand_workers: float = 100.0
     params: tuple = ()
     expect: tuple = ()
+    failures: Any = None    # repro.ft.failures.FailureSpec | None
 
     def __post_init__(self):
         if self.kind not in KINDS:

@@ -1,0 +1,204 @@
+"""Fault-tolerance primitives: monitors, injectors, elastic shrink.
+
+The recovery-contract unit layer (`repro.ft`): heartbeat death
+detection, deterministic failure schedules, straggler flagging,
+`shrink_mesh` well-formedness at every survivor count, and the
+`FailureSpec` sweep-axis invariants (normalization, static keys,
+intensity scaling, fluid degradation) plus the chaos scenario registry
+(`repro.workloads.registry.CHAOS_SCENARIOS`) the benchmarks build on.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.workers import DEFAULT_FLEET
+from repro.ft.elastic import StragglerPolicy, shrink_mesh, surviving
+from repro.ft.failures import (FSTAT_OFF, FailureInjector, FailureSpec,
+                               HeartbeatMonitor, fail_static)
+from repro.workloads import registry, stats
+from repro.workloads.scenarios import realize
+
+
+# ------------------------------------------------------------ heartbeats
+
+def test_heartbeat_dead_and_evict():
+    mon = HeartbeatMonitor([0, 1, 2], timeout_s=10.0)
+    for h in (0, 1, 2):
+        mon.beat(h, 5.0)
+    mon.beat(1, 20.0)
+    assert mon.dead(now=16.0) == [0, 2]     # 16 - 5 > 10; host 1 beat late
+    mon.evict(2)
+    assert mon.dead(now=16.0) == [0]
+    assert mon.alive == [0, 1]
+    mon.beat(99, 0.0)                        # unknown host: ignored
+    assert 99 not in mon.last
+    mon.evict(2)                             # double-evict: no-op
+
+
+def test_heartbeat_boundary_is_strict():
+    mon = HeartbeatMonitor([0], timeout_s=10.0)
+    mon.beat(0, 0.0)
+    assert mon.dead(now=10.0) == []          # exactly timeout: still alive
+    assert mon.dead(now=10.0 + 1e-9) == [0]
+
+
+# -------------------------------------------------------------- injector
+
+def test_injector_deterministic_and_bounded():
+    a = FailureInjector(n_hosts=4, seed=7, crash_rate=0.05,
+                        straggle_rate=0.05, horizon_steps=500)
+    b = FailureInjector(n_hosts=4, seed=7, crash_rate=0.05,
+                        straggle_rate=0.05, horizon_steps=500)
+    assert [(e.step, e.host, e.kind, e.factor) for e in a.events] \
+        == [(e.step, e.host, e.kind, e.factor) for e in b.events]
+    assert a.events, "rates this high must schedule something in 500 steps"
+    for e in a.events:
+        assert 0 <= e.host < 4 and 0 <= e.step < 500
+        assert e.kind in ("crash", "straggle")
+        if e.kind == "straggle":
+            assert 2.0 <= e.factor <= 10.0
+    step0 = [e for e in a.events if e.step == a.events[0].step]
+    assert a.at(a.events[0].step) == step0
+
+
+def test_injector_zero_rates_empty():
+    inj = FailureInjector(n_hosts=4, seed=0, crash_rate=0.0,
+                          straggle_rate=0.0, horizon_steps=100)
+    assert inj.events == [] and inj.at(0) == []
+
+
+# ------------------------------------------------------------ stragglers
+
+def test_straggler_policy_flags_slow_host():
+    pol = StragglerPolicy(threshold=3.0, window=20)
+    for _ in range(5):
+        for h in (0, 1, 2):
+            pol.record(h, 1.0)
+        pol.record(3, 10.0)
+    assert pol.stragglers() == [3]
+
+
+def test_straggler_policy_needs_three_samples():
+    pol = StragglerPolicy(threshold=3.0)
+    pol.record(0, 1.0)
+    pol.record(1, 100.0)
+    pol.record(1, 100.0)                     # only 2 samples: not judged
+    assert pol.stragglers() == []
+    assert StragglerPolicy().stragglers() == []
+
+
+def test_straggler_window_forgets_old_slowness():
+    pol = StragglerPolicy(threshold=3.0, window=5)
+    for h in (0, 1):
+        for _ in range(5):
+            pol.record(h, 1.0)
+    for _ in range(5):
+        pol.record(2, 50.0)
+    assert pol.stragglers() == [2]
+    for _ in range(5):                       # recovery scrolls out the window
+        pol.record(2, 1.0)
+    assert pol.stragglers() == []
+
+
+# --------------------------------------------------------- elastic shrink
+
+def test_shrink_mesh_preserves_model_width():
+    mesh, dropped = shrink_mesh(list(range(7)), model_width=2)
+    assert mesh.devices.shape == (3, 2) and dropped == 1
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_shrink_mesh_narrows_model_axis():
+    """Fewer survivors than the model width: fall back to the widest
+    power-of-two axis that fits (down to 1-wide for one survivor)."""
+    mesh, dropped = shrink_mesh(list(range(3)), model_width=4)
+    assert mesh.devices.shape == (1, 2) and dropped == 1
+    mesh, dropped = shrink_mesh([5], model_width=8)
+    assert mesh.devices.shape == (1, 1) and dropped == 0
+
+
+def test_shrink_mesh_rejects_degenerate_inputs():
+    with pytest.raises(ValueError, match="no surviving devices"):
+        shrink_mesh([], model_width=2)
+    with pytest.raises(ValueError, match="model_width"):
+        shrink_mesh([0, 1], model_width=0)
+
+
+def test_surviving_preserves_order():
+    assert surviving([3, 1, 4, 1, 5], lambda i: i == 1) == [3, 4, 5]
+    assert surviving([], lambda i: True) == []
+
+
+# ------------------------------------------------------- FailureSpec axis
+
+def test_failure_spec_normalization_and_static_key():
+    off = FailureSpec()
+    assert not off.enabled and off.normalized() is None
+    assert fail_static(None) == FSTAT_OFF == fail_static(off)
+    on = FailureSpec(crash_p=0.1, max_retries=1, max_failover=3)
+    assert on.enabled and on.normalized() is on
+    assert fail_static(on) == (True, 1, 3)
+    # an evacuation window with zero membership (or an empty window) is off
+    assert not FailureSpec(evac_start_s=10.0, evac_end_s=20.0).enabled
+    assert not FailureSpec(evac_frac=0.5, evac_start_s=20.0,
+                           evac_end_s=10.0).enabled
+
+
+def test_failure_spec_scaled():
+    full = FailureSpec(spinup_fail_p=0.8, crash_p=0.4, straggler_frac=0.5,
+                       evac_frac=0.6, evac_start_s=10.0, evac_end_s=20.0,
+                       retry_backoff_s=3.0)
+    half = full.scaled(0.5)
+    assert (half.spinup_fail_p, half.crash_p) == (0.4, 0.2)
+    assert (half.straggler_frac, half.evac_frac) == (0.25, 0.3)
+    assert half.retry_backoff_s == 3.0       # shape knobs not scaled
+    assert full.scaled(2.0).spinup_fail_p == 1.0     # clamped
+    assert full.scaled(0.0).normalized() is None
+
+
+def test_degrade_fleet_monotone_in_intensity():
+    """Fluid stand-in: effective capacity must not increase with failure
+    intensity (the rate simulator sees failures as degraded fleets)."""
+    full = FailureSpec(spinup_fail_p=0.3, crash_p=0.1, straggler_frac=0.2,
+                       straggler_factor=4.0)
+    fleets = [full.scaled(i).degrade_fleet(DEFAULT_FLEET)
+              for i in (0.0, 0.5, 1.0)]
+    assert fleets[0] == DEFAULT_FLEET        # zero intensity: untouched
+    su = [f.fpga.spin_up_s for f in fleets]
+    sp = [f.fpga.speedup for f in fleets]
+    assert su[0] <= su[1] <= su[2] and su[2] > su[0]
+    assert sp[0] >= sp[1] >= sp[2] and sp[2] < sp[0]
+
+
+# --------------------------------------------------------- chaos registry
+
+def test_chaos_registry_contract():
+    names = registry.chaos_names()
+    assert names == ["crash_storm", "flaky_fpga", "region_evac",
+                     "straggler_tail"]
+    assert not set(names) & set(registry.names()), \
+        "chaos entries must not leak into the scenario_suite library"
+    for name in names:
+        spec = registry.get_chaos(name)
+        assert spec.failures is not None and spec.failures.enabled
+    with pytest.raises(KeyError, match="unknown chaos scenario"):
+        registry.get_chaos("nope")
+
+
+def test_chaos_register_rejects_bad_specs():
+    from repro.workloads.scenarios import ScenarioSpec
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register_chaos(registry.get_chaos("flaky_fpga"))
+    with pytest.raises(ValueError, match="needs a FailureSpec"):
+        registry.register_chaos(ScenarioSpec(name="no_faults",
+                                             kind="diurnal"))
+
+
+@pytest.mark.parametrize("name", sorted(registry.CHAOS_SCENARIOS))
+def test_every_chaos_scenario_validates(name):
+    spec = registry.get_chaos(name)
+    batch = realize(spec, seeds=(0, 1, 2))
+    ok, measured, failures = stats.validate(spec, batch.rates)
+    assert ok, failures

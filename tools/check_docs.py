@@ -15,7 +15,11 @@ Validates that the documentation layer stays tethered to the code:
   5. every markdown-file mention in `src/` / `benchmarks/` / `tools/` /
      `examples/` Python sources (docstrings and comments — e.g. "see
      EXPERIMENTS.md §Perf") resolves to a real file at the repo root or
-     under docs/, so doc references in code can't rot silently.
+     under docs/, so doc references in code can't rot silently;
+  6. every `tests/*.py` mention in those same Python sources (e.g. a
+     module promising "exercised in tests/test_ft.py") names a test
+     file that actually exists, so code can't point at deleted or
+     never-written test suites.
 
 Usage: python tools/check_docs.py   (exit 1 on any broken reference)
 """
@@ -48,6 +52,8 @@ TESTREF_RE = re.compile(r"\b(tests/[\w/]+\.py)::(\w+)")
 # twice) at the root or under docs/
 MD_PATH_IN_PY_RE = re.compile(r"\b((?:[\w-]+/)+[\w.-]+\.md)\b")
 MD_BARE_IN_PY_RE = re.compile(r"(?<![\w/-])([A-Za-z][\w.-]*\.md)\b")
+# test-file mentions in Python sources: tests/test_ft.py etc.
+TESTS_IN_PY_RE = re.compile(r"\b(tests/[\w/-]+\.py)\b")
 
 PY_SCAN_DIRS = ("src", "benchmarks", "tools", "examples")
 
@@ -134,6 +140,13 @@ def check_md_refs_in_py(path: str, text: str, errors: list[str]) -> None:
             fail(errors, f"{path}: dangling doc reference {ref}")
 
 
+def check_test_refs_in_py(path: str, text: str, errors: list[str]) -> None:
+    """Every tests/*.py mention in a Python source must exist."""
+    for ref in sorted(set(TESTS_IN_PY_RE.findall(text))):
+        if not os.path.isfile(os.path.join(ROOT, ref)):
+            fail(errors, f"{path}: dangling test reference {ref}")
+
+
 def main() -> int:
     errors: list[str] = []
     for path in DOC_FILES:
@@ -148,8 +161,9 @@ def main() -> int:
     n_py = 0
     for path in iter_py_files():
         n_py += 1
-        check_md_refs_in_py(path, open(os.path.join(ROOT, path)).read(),
-                            errors)
+        text = open(os.path.join(ROOT, path)).read()
+        check_md_refs_in_py(path, text, errors)
+        check_test_refs_in_py(path, text, errors)
     for e in errors:
         print(f"check_docs: {e}")
     print(f"check_docs: {len(DOC_FILES)} doc files + {n_py} py files, "
