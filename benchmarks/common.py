@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 
 FAST = os.environ.get("BENCH_FAST", "1") != "0"
@@ -65,20 +66,57 @@ def emit(name: str, rows: list[dict], t0: float) -> None:
 HISTORY_CAP = 50
 
 
-def _load_sweep() -> dict:
+def atomic_write_json(path: str, data) -> None:
+    """Crash-safe JSON write: serialize to a temp file in the target
+    directory, fsync, then `os.replace` over the destination. A run
+    killed mid-write (the SIGKILL resilience tests do exactly this)
+    leaves either the old file or the new one — never a truncated
+    half-JSON that poisons every later benchmark run."""
+    path = os.path.abspath(path)
+    directory = os.path.dirname(path)
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory,
+                               prefix=os.path.basename(path) + ".tmp.")
     try:
-        with open(SWEEP_JSON) as f:
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def load_json_or_quarantine(path: str) -> dict:
+    """Read a results JSON; on corruption, move the bad file aside to
+    ``<path>.corrupt`` (evidence, not data loss) and start fresh."""
+    try:
+        with open(path) as f:
             return json.load(f)
-    except (OSError, ValueError):
+    except OSError:
         return {}
+    except ValueError:
+        try:
+            os.replace(path, path + ".corrupt")
+            print(f"[bench] WARNING: corrupt {path}; "
+                  f"quarantined to {path}.corrupt")
+        except OSError:     # pragma: no cover — read-only results dir
+            pass
+        return {}
+
+
+def _load_sweep() -> dict:
+    return load_json_or_quarantine(SWEEP_JSON)
 
 
 def _save_sweep(data: dict) -> None:
     try:
-        os.makedirs(os.path.dirname(SWEEP_JSON), exist_ok=True)
-        with open(SWEEP_JSON, "w") as f:
-            json.dump(data, f, indent=2, sort_keys=True)
-            f.write("\n")
+        atomic_write_json(SWEEP_JSON, data)
     except OSError:         # pragma: no cover — read-only results dir
         pass
 

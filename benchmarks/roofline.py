@@ -191,14 +191,12 @@ def report(minplus_rows: list[dict] | None = None) -> list[dict]:
             continue
         rows.append(rec)
     if minplus_rows is None:
-        try:
-            prev = json.loads(OUT.read_text())
-        except (OSError, ValueError):
-            prev = []
+        from benchmarks.common import load_json_or_quarantine
+        prev = load_json_or_quarantine(str(OUT)) or []
         minplus_rows = [r for r in prev if r.get("kind") == "minplus"]
     rows.extend(minplus_rows)
-    OUT.parent.mkdir(parents=True, exist_ok=True)
-    OUT.write_text(json.dumps(rows, indent=1))
+    from benchmarks.common import atomic_write_json
+    atomic_write_json(str(OUT), rows)
     return rows
 
 

@@ -24,6 +24,14 @@ def main() -> None:
                             fig7_request_sizes, roofline, scenario_suite,
                             table8_production, table9_dispatch, warmup)
     from benchmarks.common import emit, timed
+    from repro.sim.harness import invariants_enabled
+
+    # every sweep below runs through repro.sim.exec.execute, whose
+    # invariant guards (conservation laws, NaN/Inf sentinels) are on by
+    # default; say so up front so a REPRO_SKIP_INVARIANTS run is visible
+    # in the log next to its numbers.
+    print(f"invariant_guards,"
+          f"{'on' if invariants_enabled() else 'OFF (REPRO_SKIP_INVARIANTS)'}")
 
     suites = [
         ("sweep_warmup", warmup.run),

@@ -1,4 +1,5 @@
-"""Checkpointing: sharded store + manager with elastic restore."""
+"""Checkpointing: sharded store + managers with elastic restore."""
 
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint  # noqa: F401
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,  # noqa: F401
+                                    save_named, restore_named, has_named)
+from repro.checkpoint.manager import CheckpointManager, ChunkStore  # noqa: F401

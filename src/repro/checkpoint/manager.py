@@ -1,9 +1,16 @@
-"""Checkpoint manager: periodic saves, retention, resume cursor.
+"""Checkpoint managers: periodic step saves and content-addressed chunks.
 
-The manager owns the policy (every N steps, keep last K); the train driver
-owns the data. The saved tree bundles (train_state, data_cursor, rng) so a
-restart resumes mid-epoch deterministically (the data pipeline regenerates
-batch t from its step cursor; see data.pipeline).
+The managers own the policy, the store owns the bytes:
+
+  * `CheckpointManager` — the training flavor: save every N steps, keep
+    the last K, resume from the step cursor (the data pipeline
+    regenerates batch t from its cursor; see data.pipeline).
+  * `ChunkStore` — the sweep-harness flavor (`repro.sim.harness`):
+    content-addressed per-chunk results keyed by a stable fingerprint,
+    so a killed sweep restarted with the same ``checkpoint_dir`` re-runs
+    only the chunks that never finished. Entries are written atomically
+    (`repro.checkpoint.store.save_named`), so a SIGKILL mid-save leaves
+    the store consistent.
 """
 
 from __future__ import annotations
@@ -11,8 +18,11 @@ from __future__ import annotations
 import shutil
 from pathlib import Path
 
-from repro.checkpoint.store import (latest_step, restore_checkpoint,
-                                    save_checkpoint)
+import numpy as np
+
+from repro.checkpoint.store import (has_named, latest_step, restore_checkpoint,
+                                    restore_named, save_checkpoint,
+                                    save_named)
 
 
 class CheckpointManager:
@@ -40,3 +50,44 @@ class CheckpointManager:
 
     def restore(self, tree_like, shardings=None):
         return restore_checkpoint(self.dir, tree_like, shardings=shardings)
+
+
+class ChunkStore:
+    """Content-addressed result store for resumable sweeps.
+
+    One entry per completed `repro.sim.plan.ChunkDispatch`, under
+    ``<dir>/chunk_<fingerprint>/`` (the fingerprint is computed by
+    `repro.sim.harness.chunk_fingerprint` and covers the chunk's static
+    program arguments, its padded input arrays — hence the resolved
+    scenario demand and FailureSpec knobs baked into them — the backend
+    name and a code-version salt). ``load`` returns the flat leaf arrays
+    of the dispatch's output pytree; the harness reassembles the
+    engine-specific structure."""
+
+    PREFIX = "chunk_"
+
+    def __init__(self, directory: str | Path):
+        self.dir = Path(directory)
+
+    def has(self, key: str) -> bool:
+        return has_named(self.dir, self.PREFIX + key)
+
+    def save(self, key: str, leaves, metadata: dict | None = None) -> None:
+        save_named(self.dir, self.PREFIX + key, list(leaves),
+                   metadata=metadata)
+
+    def load(self, key: str) -> list[np.ndarray]:
+        arrays, _ = restore_named(self.dir, self.PREFIX + key)
+        return arrays
+
+    def keys(self) -> list[str]:
+        """Fingerprints of every complete entry (sorted, for tests)."""
+        if not self.dir.is_dir():
+            return []
+        return sorted(p.name[len(self.PREFIX):] for p in self.dir.iterdir()
+                      if p.name.startswith(self.PREFIX)
+                      and (p / "manifest.json").exists())
+
+    def clear(self) -> None:
+        for p in list(self.dir.glob(self.PREFIX + "*")):
+            shutil.rmtree(p, ignore_errors=True)

@@ -12,6 +12,13 @@ records the slicing), so a restore onto a different mesh simply re-shards
 — the train driver re-applies its own NamedShardings when it puts the
 arrays back on device. Writes go to a tmp dir then os.replace, so a crash
 mid-save never corrupts LATEST.
+
+Besides the step-numbered training layout, the same atomic npz+manifest
+machinery is exposed as *named* entries (`save_named` / `restore_named` /
+`has_named`): one directory per arbitrary name, no LATEST pointer. The
+sweep harness (`repro.sim.harness`) uses named entries content-addressed
+by chunk fingerprint, so a killed sweep resumes from exactly the chunks
+that finished.
 """
 
 from __future__ import annotations
@@ -31,8 +38,11 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save_checkpoint(directory: str | Path, step: int, tree,
-                    metadata: dict | None = None) -> Path:
+def save_named(directory: str | Path, name: str, tree,
+               metadata: dict | None = None) -> Path:
+    """Atomically write one named entry ``<directory>/<name>/`` holding
+    the flattened ``tree`` (npz) plus a manifest. A crash mid-save leaves
+    either the previous complete entry or none — never a torn one."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(tree)
@@ -50,7 +60,7 @@ def save_checkpoint(directory: str | Path, step: int, tree,
         np.savez(tmp / "shard_0.npz",
                  **{f"a{i}": a for i, a in enumerate(arrays)})
         manifest = {
-            "step": step,
+            "name": name,
             "treedef": str(treedef),
             "n_leaves": len(arrays),
             "shapes": [list(a.shape) for a in arrays],
@@ -58,13 +68,40 @@ def save_checkpoint(directory: str | Path, step: int, tree,
             "metadata": metadata or {},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
-        final = directory / f"step_{step}"
+        final = directory / name
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    return final
+
+
+def has_named(directory: str | Path, name: str) -> bool:
+    """True iff a *complete* named entry exists (manifest present — the
+    atomic rename guarantees payload and manifest land together)."""
+    return (Path(directory) / name / "manifest.json").exists()
+
+
+def restore_named(directory: str | Path, name: str
+                  ) -> tuple[list[np.ndarray], dict]:
+    """Load a named entry's flat leaf arrays + manifest. Callers that
+    know the pytree structure reassemble it themselves (the manifest's
+    ``treedef`` string is informational)."""
+    d = Path(directory) / name
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "shard_0.npz") as z:
+        arrays = [z[f"a{i}"] for i in range(manifest["n_leaves"])]
+    return arrays, manifest
+
+
+def save_checkpoint(directory: str | Path, step: int, tree,
+                    metadata: dict | None = None) -> Path:
+    directory = Path(directory)
+    meta = dict(metadata or {})
+    final = save_named(directory, f"step_{step}", tree,
+                       metadata={"step": step, **meta})
     # atomic LATEST pointer
     ptr_tmp = directory / ".LATEST.tmp"
     ptr_tmp.write_text(f"step_{step}")
@@ -92,10 +129,8 @@ def restore_checkpoint(directory: str | Path, tree_like, step: int | None = None
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {directory}")
-    d = directory / f"step_{step}"
-    manifest = json.loads((d / "manifest.json").read_text())
-    with np.load(d / "shard_0.npz") as z:
-        arrays = [z[f"a{i}"] for i in range(manifest["n_leaves"])]
+    arrays, manifest = restore_named(directory, f"step_{step}")
+    manifest = {"step": step, **manifest}
     leaves, treedef = _flatten(tree_like)
     if len(leaves) != len(arrays):
         raise ValueError(

@@ -42,17 +42,31 @@ class RunTotals:
     wasted_spinup_j: float = 0.0      # energy burned by failed spin-up attempts
     breakdown: dict = field(default_factory=dict)
 
+    # additive field groups — shared by merge() and the invariant
+    # validators in repro.sim.harness (one list to keep in sync when a
+    # counter is added)
+    FLOAT_FIELDS = ("energy_j", "cost_usd", "work_cpu_s",
+                    "work_on_fpga_cpu_s", "work_on_cpu_cpu_s", "fpga_idle_j",
+                    "fpga_busy_j", "cpu_busy_j", "spinup_j",
+                    "wasted_spinup_j")
+    COUNT_FIELDS = ("requests", "deadline_misses", "fpga_spinups",
+                    "cpu_spinups", "retries", "failed_spinups", "crashes",
+                    "recovered_requests", "failure_misses")
+
     def merge(self, other: "RunTotals") -> "RunTotals":
         out = RunTotals()
-        for f in ("energy_j", "cost_usd", "work_cpu_s", "work_on_fpga_cpu_s",
-                  "work_on_cpu_cpu_s", "fpga_idle_j", "fpga_busy_j",
-                  "cpu_busy_j", "spinup_j", "wasted_spinup_j"):
+        for f in self.FLOAT_FIELDS:
             setattr(out, f, getattr(self, f) + getattr(other, f))
-        for f in ("requests", "deadline_misses", "fpga_spinups", "cpu_spinups",
-                  "retries", "failed_spinups", "crashes",
-                  "recovered_requests", "failure_misses"):
+        for f in self.COUNT_FIELDS:
             setattr(out, f, getattr(self, f) + getattr(other, f))
         return out
+
+    def is_finite(self) -> bool:
+        """True iff every float field is finite (NaN/Inf sentinel; the
+        harness raises `repro.sim.harness.InvariantViolation` when not)."""
+        import math
+        return all(math.isfinite(float(getattr(self, f)))
+                   for f in self.FLOAT_FIELDS)
 
 
 @dataclass(frozen=True)

@@ -23,4 +23,11 @@ dispatch-policy studies (paper Table 9) and as ground truth in tests.
 seed x objective) cells; `sweep.sweep_events` runs whole DES grids in a
 handful of dispatches. Equivalence contract vs the `events` oracle in
 docs/architecture.md.
+
+`harness` — the execution-hardening layer wrapped around `exec.execute`:
+content-addressed per-chunk checkpoint/resume (``checkpoint_dir=`` on
+every sweep entry point), bounded retry + wall timeout + mesh->local
+degradation (`RetryPolicy`), and conservation-law invariant guards over
+every result (`InvariantViolation`; opt-out ``REPRO_SKIP_INVARIANTS``).
+See docs/architecture.md "Execution hardening".
 """

@@ -761,6 +761,47 @@ class EventCell:
     seed: int = 0                 # scenario realization seed
     failures: FailureSpec | None = None   # fault model (static sweep axis)
 
+    def __post_init__(self):
+        """Fail-fast construction-time validation: malformed cells raise
+        a clear ValueError here instead of an opaque XLA shape error deep
+        inside `repro.sim.plan.plan_events`."""
+        if self.arrival_times is not None:
+            a = np.asarray(self.arrival_times, np.float64)
+            if a.ndim != 1:
+                raise ValueError(
+                    f"EventCell.arrival_times must be a 1-D time stream, "
+                    f"got shape {a.shape}")
+            if a.size and (not np.all(np.isfinite(a)) or np.any(a < 0)):
+                raise ValueError(
+                    "EventCell.arrival_times must be non-negative finite "
+                    "timestamps")
+            if a.size > 1 and np.any(np.diff(a) < 0):
+                raise ValueError(
+                    "EventCell.arrival_times must be sorted ascending "
+                    "(the DES consumes a time-ordered stream)")
+        if self.size_s is not None and not (
+                np.isfinite(self.size_s) and self.size_s > 0):
+            raise ValueError(
+                f"EventCell.size_s must be a positive finite service "
+                f"time, got {self.size_s!r}")
+        if self.deadline_s is not None and not (
+                np.isfinite(self.deadline_s) and self.deadline_s > 0):
+            raise ValueError(
+                f"EventCell.deadline_s must be > 0, got {self.deadline_s!r}")
+        if self.horizon_s is not None and not (
+                np.isfinite(self.horizon_s) and self.horizon_s > 0):
+            raise ValueError(
+                f"EventCell.horizon_s must be > 0, got {self.horizon_s!r}")
+        if not np.isfinite(self.energy_weight):
+            raise ValueError(
+                f"EventCell.energy_weight must be finite, got "
+                f"{self.energy_weight!r}")
+        if np.ndim(self.seed) != 0:
+            raise ValueError(
+                f"EventCell.seed must be a scalar (one seed per cell — "
+                f"expand seed batches into cells), got shape "
+                f"{np.shape(self.seed)}")
+
 
 def _entries(arr: np.ndarray, interval_s: float,
              horizon: float) -> list[tuple[np.ndarray, float | None]]:

@@ -30,6 +30,13 @@ question, behind a two-backend interface:
 and None falls back to the ``BENCH_SWEEP_BACKEND`` env var (default
 ``local``). Sharding-scheme rationale: docs/DESIGN.md §5; the
 plan -> backend flow: docs/architecture.md "Execution backends".
+
+`execute` routes every dispatch through a
+`repro.sim.harness.ResilientRunner`: per-chunk checkpoint/resume
+(``checkpoint_dir=``), bounded retry with backoff + wall timeout, and
+mesh->local degradation on backend failure; invariant guards validate
+every result by default (opt-out ``REPRO_SKIP_INVARIANTS``). See
+docs/architecture.md "Execution hardening".
 """
 
 from __future__ import annotations
@@ -184,23 +191,43 @@ def get_backend(backend: str | Backend | None = None) -> Backend:
     return _instances[name]
 
 
-def execute(plan: SweepPlan, backend: str | Backend | None = None):
+def execute(plan: SweepPlan, backend: str | Backend | None = None, *,
+            checkpoint_dir=None, retry=None, validate: bool | None = None):
     """Run every dispatch of a plan on a backend and scatter the rows
     back into cell order. Returns `SweepResult` for rate plans,
-    `EventSweepResult` for event plans; both carry ``n_dispatches`` and
-    the backend's ``n_devices`` / per-dispatch device counts."""
+    `EventSweepResult` for event plans; both carry ``n_dispatches``, the
+    backend's ``n_devices`` / per-dispatch device counts, and the
+    resilience ``meta`` record.
+
+    Execution is hardened by `repro.sim.harness` (docs/architecture.md
+    "Execution hardening"): ``checkpoint_dir`` persists each completed
+    chunk (content-addressed — a killed run restarted with the same
+    directory re-executes only unfinished chunks, bit-identically);
+    ``retry`` is a `repro.sim.harness.RetryPolicy` (bounded retry +
+    backoff, per-chunk wall timeout, mesh->local degradation); and the
+    invariant guards validate every result by default (``validate=None``
+    reads the ``REPRO_SKIP_INVARIANTS`` opt-out, True/False force)."""
+    from repro.sim.harness import (ResilientRunner, check_sweep_result,
+                                   invariants_enabled)
     backend = get_backend(backend)
+    runner = ResilientRunner(backend, checkpoint_dir=checkpoint_dir,
+                             retry=retry)
     if plan.kind == "rate":
-        return _execute_rate(plan, backend)
-    return _execute_event(plan, backend)
+        res = _execute_rate(plan, backend, runner)
+    else:
+        res = _execute_event(plan, backend, runner)
+    res.meta.update(runner.meta())
+    if invariants_enabled() if validate is None else validate:
+        check_sweep_result(res)
+    return res
 
 
-def _execute_rate(plan: SweepPlan, backend: Backend) -> SweepResult:
+def _execute_rate(plan: SweepPlan, backend: Backend, runner) -> SweepResult:
     n = len(plan.cells)
     leaves = [np.zeros((n,), np.float64) for _ in Accum._fields]
     devs = []
     for d in plan.dispatches:
-        acc = backend.run(d)
+        acc = runner.run(d)
         devs.append(backend.devices_for(d))
         dest = list(d.cell_idx)
         for leaf, out in zip(acc, leaves):
@@ -210,11 +237,12 @@ def _execute_rate(plan: SweepPlan, backend: Backend) -> SweepResult:
                        n_devices=backend.n_devices, dispatch_devices=devs)
 
 
-def _execute_event(plan: SweepPlan, backend: Backend) -> EventSweepResult:
+def _execute_event(plan: SweepPlan, backend: Backend,
+                   runner) -> EventSweepResult:
     out = [None] * len(plan.cells)
     devs = []
     for d in plan.dispatches:
-        acc, fail, over = backend.run(d)
+        acc, fail, over = runner.run(d)
         devs.append(backend.devices_for(d))
         acc_np = [np.asarray(leaf) for leaf in acc]
         fail_np = [np.asarray(leaf) for leaf in fail]

@@ -355,13 +355,18 @@ class SweepResult:
     per plan chunk) — the batching contract benchmarks and tests assert
     on. ``backend``/``n_devices``/``dispatch_devices`` record which
     `repro.sim.exec` backend ran the plan and how many mesh devices
-    each dispatch was sharded over (all 1s on `LocalBackend`)."""
+    each dispatch was sharded over (all 1s on `LocalBackend`).
+    ``meta`` carries the `repro.sim.harness.ResilientRunner` record:
+    executed/restored chunk counters, retried dispatches and
+    ``degraded_chunks`` (chunk indices that fell back to the local
+    backend)."""
 
     def __init__(self, cells: Sequence, accum: Accum,
                  total_work: np.ndarray, total_requests: np.ndarray,
                  n_dispatches: int = 0, backend: str = "local",
                  n_devices: int = 1,
-                 dispatch_devices: Sequence[int] | None = None):
+                 dispatch_devices: Sequence[int] | None = None,
+                 meta: dict | None = None):
         self.cells = list(cells)
         self.accum = accum                      # leaves: (n_cells,) np arrays
         self._work = total_work
@@ -370,6 +375,7 @@ class SweepResult:
         self.backend = backend
         self.n_devices = n_devices
         self.dispatch_devices = list(dispatch_devices or [])
+        self.meta = dict(meta or {})
 
     def __len__(self) -> int:
         return len(self.cells)
@@ -399,18 +405,22 @@ class EventSweepResult:
 
     Sequence-compatible with the bare ``list[RunTotals]`` it replaced:
     iteration, ``len`` and indexing all see the totals, and
-    ``totals()`` / ``totals(i)`` mirror `SweepResult.totals`."""
+    ``totals()`` / ``totals(i)`` mirror `SweepResult.totals`. ``meta``
+    carries the `repro.sim.harness.ResilientRunner` record (see
+    `SweepResult`)."""
 
     def __init__(self, cells: Sequence, totals: Sequence[RunTotals],
                  n_dispatches: int = 0, backend: str = "local",
                  n_devices: int = 1,
-                 dispatch_devices: Sequence[int] | None = None):
+                 dispatch_devices: Sequence[int] | None = None,
+                 meta: dict | None = None):
         self.cells = list(cells)
         self._totals = list(totals)
         self.n_dispatches = n_dispatches
         self.backend = backend
         self.n_devices = n_devices
         self.dispatch_devices = list(dispatch_devices or [])
+        self.meta = dict(meta or {})
 
     def __len__(self) -> int:
         return len(self._totals)

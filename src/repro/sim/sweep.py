@@ -77,21 +77,63 @@ class SweepCell:
     failures: Any = None          # repro.ft.failures.FailureSpec | None;
                                   # fluidized by plan_sweep (degrade_fleet)
 
+    def __post_init__(self):
+        """Fail-fast construction-time validation: malformed cells raise
+        a clear ValueError here instead of an opaque XLA shape error deep
+        inside `repro.sim.plan.plan_sweep`."""
+        if self.counts is not None:
+            c = np.asarray(self.counts)
+            if c.ndim != 1:
+                raise ValueError(
+                    f"SweepCell.counts must be 1-D per-second counts, got "
+                    f"shape {c.shape}")
+            if c.size and (np.any(c < 0) or not np.all(np.isfinite(
+                    c.astype(np.float64)))):
+                raise ValueError(
+                    "SweepCell.counts must be non-negative finite arrival "
+                    "counts (negative rate injected?)")
+        if self.size_s is not None and not (
+                np.isfinite(self.size_s) and self.size_s > 0):
+            raise ValueError(
+                f"SweepCell.size_s must be a positive finite service "
+                f"time, got {self.size_s!r}")
+        if not np.isfinite(self.energy_weight):
+            raise ValueError(
+                f"SweepCell.energy_weight must be finite, got "
+                f"{self.energy_weight!r}")
+        if self.headroom < 0:
+            raise ValueError(
+                f"SweepCell.headroom must be >= 0, got {self.headroom!r}")
+        if np.ndim(self.seed) != 0:
+            raise ValueError(
+                f"SweepCell.seed must be a scalar (one seed per cell — "
+                f"expand seed batches into cells), got shape "
+                f"{np.shape(self.seed)}")
+
 
 def sweep(cells: Iterable[SweepCell], n_max: int | None = None,
-          backend: str | Backend | None = None) -> SweepResult:
+          backend: str | Backend | None = None,
+          checkpoint_dir=None, retry=None) -> SweepResult:
     """Simulate every cell, one dispatch per (policy, interval, spin-up,
     horizon) group chunk. Cell order is preserved in the result.
     Scenario-bearing cells (``counts=None, scenario=spec``) are
     synthesized first, one batched dispatch per distinct spec.
     ``backend`` selects the `repro.sim.exec` execution backend
-    (None -> ``BENCH_SWEEP_BACKEND`` env var -> local)."""
-    return execute(plan_sweep(cells, n_max=n_max), backend)
+    (None -> ``BENCH_SWEEP_BACKEND`` env var -> local).
+
+    ``checkpoint_dir`` makes the sweep resumable (each completed chunk
+    is persisted; a killed run restarted with the same directory
+    re-executes only unfinished chunks) and ``retry`` is a
+    `repro.sim.harness.RetryPolicy` — see docs/architecture.md
+    "Execution hardening"."""
+    return execute(plan_sweep(cells, n_max=n_max), backend,
+                   checkpoint_dir=checkpoint_dir, retry=retry)
 
 
 def sweep_events(cells: Iterable[EventCell], n_max: int = 512,
                  w_fpga: int = 32, w_cpu: int = 64,
-                 backend: str | Backend | None = None) -> EventSweepResult:
+                 backend: str | Backend | None = None,
+                 checkpoint_dir=None, retry=None) -> EventSweepResult:
     """Event-level (DES) cells in sweep grids.
 
     The exact discrete-event counterpart of `sweep`: every `EventCell`
@@ -108,15 +150,18 @@ def sweep_events(cells: Iterable[EventCell], n_max: int = 512,
     regions are large enough — see the engine's equivalence contract in
     docs/architecture.md). Scenario-bearing cells
     (``arrival_times=None, scenario=spec``) get their arrival streams
-    synthesized first, like `sweep`.
+    synthesized first, like `sweep`. ``checkpoint_dir`` / ``retry``
+    harden execution exactly as in `sweep` (docs/architecture.md
+    "Execution hardening").
     """
     plan = plan_events(cells, n_max=n_max, w_fpga=w_fpga, w_cpu=w_cpu)
-    return execute(plan, backend)
+    return execute(plan, backend, checkpoint_dir=checkpoint_dir, retry=retry)
 
 
 def tune_fpga_dynamic_cells(cells: Iterable[SweepCell], max_k: int = 16,
                             n_max: int | None = None,
                             backend: str | Backend | None = None,
+                            checkpoint_dir=None, retry=None,
                             ) -> list[tuple[int, RunTotals]]:
     """Batched §5.1 headroom tuning: expand every cell into all
     ``max_k + 1`` headroom levels, simulate them in one sweep, and pick
@@ -137,7 +182,8 @@ def tune_fpga_dynamic_cells(cells: Iterable[SweepCell], max_k: int = 16,
         units.append(unit)
         expanded.extend(replace(c, policy="fpga_dynamic", headroom=k * unit)
                         for k in range(K))
-    res = sweep(expanded, n_max=n_max, backend=backend)
+    res = sweep(expanded, n_max=n_max, backend=backend,
+                checkpoint_dir=checkpoint_dir, retry=retry)
     misses = res.deadline_misses.reshape(len(cells), K)
     out = []
     for ci, c in enumerate(cells):

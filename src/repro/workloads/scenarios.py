@@ -188,6 +188,22 @@ class ScenarioSpec:
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown scenario kind {self.kind!r}")
+        # fail-fast shape validation: a bad spec raises here, not as an
+        # opaque XLA error inside the jitted realize() program
+        if not self.horizon_s > 0:
+            raise ValueError(
+                f"ScenarioSpec.horizon_s must be > 0, got "
+                f"{self.horizon_s!r}")
+        if not (np.isfinite(self.request_size_s)
+                and self.request_size_s > 0):
+            raise ValueError(
+                f"ScenarioSpec.request_size_s must be a positive finite "
+                f"service time, got {self.request_size_s!r}")
+        if not (np.isfinite(self.mean_demand_workers)
+                and self.mean_demand_workers >= 0):
+            raise ValueError(
+                f"ScenarioSpec.mean_demand_workers must be >= 0 (negative "
+                f"rate?), got {self.mean_demand_workers!r}")
 
     @property
     def p(self) -> dict:

@@ -1,0 +1,463 @@
+"""Resilient sweep execution (`repro.sim.harness`): checkpoint/resume,
+retry + degradation, invariant guards, and the crash-safe results emit.
+
+The headline test is `test_sigkill_mid_sweep_resume_bit_identical`: a
+subprocess sweep checkpoints its first chunk, SIGKILLs itself (the
+`REPRO_HARNESS_KILL_AFTER_CHUNKS` hook — a deterministic stand-in for
+"the job died at minute 119" that exercises the real kill path), and a
+resumed run with the same directory must re-execute ONLY the unfinished
+chunks (asserted via the `meta['executed_chunks']` /
+`meta['restored_chunks']` dispatch counters) and produce bit-identical
+totals. The subprocess inherits ``BENCH_SWEEP_BACKEND`` / ``XLA_FLAGS``,
+so the CI ``resilience`` job runs the same proof on both the local and
+the forced 2-device mesh backend.
+"""
+
+import hashlib
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.checkpoint.manager import ChunkStore
+from repro.core.metrics import RunTotals
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.sim.exec import Backend, LocalBackend, execute
+from repro.sim.harness import (ChunkExecutionError, ChunkTimeout,
+                               InvariantViolation, RetryPolicy,
+                               _call_with_timeout, check_drift,
+                               check_sweep_result, check_totals,
+                               chunk_fingerprint, plan_fingerprint)
+from repro.sim.plan import Accum, plan_events, plan_sweep
+from repro.sim.sweep import (EventCell, SweepCell, sweep, sweep_events,
+                             tune_fpga_dynamic_cells)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rate_cells(n_policies=3, horizon=400):
+    tr = synthetic_trace(seed=0, horizon_s=horizon, request_size_s=0.05,
+                         mean_demand_workers=20.0)
+    pols = ("spork", "cpu_dynamic", "fpga_static")[:n_policies]
+    return [SweepCell(p, tr.counts, 0.05, DEFAULT_FLEET) for p in pols]
+
+
+def _accum_equal(a: Accum, b: Accum) -> None:
+    for f, x, y in zip(a._fields, a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), f
+
+
+# ------------------------------------------------------------- fingerprints
+def test_chunk_fingerprint_stable_and_sensitive():
+    plan = plan_sweep(_rate_cells())
+    d = plan.dispatches[0]
+    fp = chunk_fingerprint(d, "local")
+    assert fp == chunk_fingerprint(d, "local")          # deterministic
+    assert fp != chunk_fingerprint(d, "mesh")           # backend-addressed
+    assert fp != chunk_fingerprint(d, "local", salt="other-code-version")
+
+    # any input-array perturbation must miss: +1 request in one second
+    cells = _rate_cells()
+    bumped = np.array(cells[0].counts, copy=True)
+    bumped[7] += 1
+    plan2 = plan_sweep([SweepCell(cells[0].policy, bumped, 0.05,
+                                  DEFAULT_FLEET)] + cells[1:])
+    fps1 = {chunk_fingerprint(x, "local") for x in plan.dispatches}
+    fps2 = {chunk_fingerprint(x, "local") for x in plan2.dispatches}
+    assert fps1 != fps2
+    # ... and the whole-plan fingerprint follows
+    assert plan_fingerprint(plan, "local") != plan_fingerprint(plan2, "local")
+    assert plan_fingerprint(plan, "local") == plan_fingerprint(plan, "local")
+
+
+# -------------------------------------------------------- checkpoint/resume
+def test_rate_checkpoint_resume_bit_identical(tmp_path):
+    cells = _rate_cells()
+    r1 = sweep(cells, checkpoint_dir=tmp_path)
+    assert r1.meta["checkpointed"] is True
+    assert r1.meta["executed_chunks"] == r1.n_dispatches > 1
+    assert r1.meta["restored_chunks"] == 0
+
+    r2 = sweep(cells, checkpoint_dir=tmp_path)
+    assert r2.meta["executed_chunks"] == 0
+    assert r2.meta["restored_chunks"] == r1.n_dispatches
+    _accum_equal(r1.accum, r2.accum)
+
+    # changed demand -> changed fingerprints -> full re-execution (stale
+    # entries are ignored, not mixed in)
+    bumped = np.array(cells[0].counts, copy=True)
+    bumped[3] += 2
+    cells3 = [SweepCell(c.policy, bumped, 0.05, DEFAULT_FLEET)
+              for c in cells]
+    r3 = sweep(cells3, checkpoint_dir=tmp_path)
+    assert r3.meta["restored_chunks"] == 0
+    assert r3.meta["executed_chunks"] == r3.n_dispatches
+
+
+def test_event_checkpoint_resume_bit_identical(tmp_path):
+    rng = np.random.default_rng(1)
+    cells = [EventCell(d, np.sort(rng.uniform(0.0, 60.0, 50)), 1.0,
+                       DEFAULT_FLEET, horizon_s=60.0)
+             for d in ("spork", "round_robin")]
+    e1 = sweep_events(cells, n_max=64, w_fpga=16, w_cpu=32,
+                      checkpoint_dir=tmp_path)
+    e2 = sweep_events(cells, n_max=64, w_fpga=16, w_cpu=32,
+                      checkpoint_dir=tmp_path)
+    assert e1.meta["executed_chunks"] == e1.n_dispatches > 0
+    assert e2.meta["restored_chunks"] == e1.n_dispatches
+    assert e2.meta["executed_chunks"] == 0
+    for ta, tb in zip(e1, e2):
+        assert ta.energy_j == tb.energy_j
+        assert ta.cost_usd == tb.cost_usd
+        assert ta.requests == tb.requests
+        assert ta.deadline_misses == tb.deadline_misses
+        assert ta.breakdown["slot_overflow"] == tb.breakdown["slot_overflow"]
+
+
+def test_tune_threads_checkpoint_dir(tmp_path):
+    cells = _rate_cells(n_policies=1)
+    out1 = tune_fpga_dynamic_cells(cells, max_k=2, checkpoint_dir=tmp_path)
+    assert len(list(ChunkStore(tmp_path).keys())) > 0
+    out2 = tune_fpga_dynamic_cells(cells, max_k=2, checkpoint_dir=tmp_path)
+    assert [(h, t.energy_j) for h, t in out1] \
+        == [(h, t.energy_j) for h, t in out2]
+
+
+def test_chunk_store_ignores_partial_entries(tmp_path):
+    """An entry without its manifest (a write that never completed —
+    impossible via the atomic save, but simulated here) must read as
+    missing, and be rewritable."""
+    store = ChunkStore(tmp_path)
+    store.save("abc123", [np.arange(4.0)], metadata={"kind": "rate"})
+    assert store.has("abc123")
+    os.unlink(tmp_path / "chunk_abc123" / "manifest.json")
+    assert not store.has("abc123")
+    assert "abc123" not in store.keys()
+    store.save("abc123", [np.arange(4.0)])      # re-save over the wreck
+    assert store.has("abc123")
+    (loaded,) = store.load("abc123")
+    assert np.array_equal(loaded, np.arange(4.0))
+    store.clear()
+    assert not store.has("abc123")
+
+
+# ------------------------------------------------- SIGKILL mid-sweep resume
+_CHILD = textwrap.dedent("""
+    import hashlib, json, os, sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.core.traces import synthetic_trace
+    from repro.core.workers import DEFAULT_FLEET
+    from repro.sim.sweep import SweepCell, sweep
+
+    tr = synthetic_trace(seed=0, horizon_s=400, request_size_s=0.05,
+                         mean_demand_workers=20.0)
+    cells = [SweepCell(p, tr.counts, 0.05, DEFAULT_FLEET)
+             for p in ("spork", "cpu_dynamic", "fpga_static")]
+    res = sweep(cells, checkpoint_dir=sys.argv[1])
+    h = hashlib.sha256()
+    for leaf in res.accum:
+        h.update(np.ascontiguousarray(leaf).tobytes())
+    print(json.dumps({"digest": h.hexdigest(), "backend": res.backend,
+                      "n_dispatches": res.n_dispatches, **res.meta}))
+""")
+
+
+def _run_child(ckpt_dir, kill_after=None):
+    env = dict(os.environ)       # inherits BENCH_SWEEP_BACKEND / XLA_FLAGS
+    env.pop("REPRO_HARNESS_KILL_AFTER_CHUNKS", None)
+    if kill_after is not None:
+        env["REPRO_HARNESS_KILL_AFTER_CHUNKS"] = str(kill_after)
+    return subprocess.run([sys.executable, "-c", _CHILD, str(ckpt_dir)],
+                          capture_output=True, text=True, cwd=REPO, env=env)
+
+
+def test_sigkill_mid_sweep_resume_bit_identical(tmp_path):
+    """The acceptance contract: SIGKILL a sweep after its first chunk
+    persisted; the resumed run re-executes ONLY the unfinished chunks
+    (dispatch counters prove it) and its totals are bit-identical to an
+    uninterrupted run. Runs on whatever backend ``BENCH_SWEEP_BACKEND``
+    selects — the CI resilience job exercises local AND a forced
+    2-device mesh."""
+    ref = _run_child(tmp_path / "ref")
+    assert ref.returncode == 0, ref.stderr[-3000:]
+    ref_rec = json.loads(ref.stdout.strip().splitlines()[-1])
+    n = ref_rec["n_dispatches"]
+    assert n > 1, "need a multi-chunk sweep for a mid-point to die at"
+
+    killed = _run_child(tmp_path / "ckpt", kill_after=1)
+    assert killed.returncode == -signal.SIGKILL, (
+        killed.returncode, killed.stderr[-3000:])
+
+    resumed = _run_child(tmp_path / "ckpt")
+    assert resumed.returncode == 0, resumed.stderr[-3000:]
+    rec = json.loads(resumed.stdout.strip().splitlines()[-1])
+    assert rec["restored_chunks"] == 1, rec          # the chunk that survived
+    assert rec["executed_chunks"] == n - 1, rec      # only the unfinished rest
+    assert rec["digest"] == ref_rec["digest"], (rec, ref_rec)
+    assert rec["backend"] == ref_rec["backend"]
+
+
+# --------------------------------------------------- retry and degradation
+class _FlakyBackend(Backend):
+    """Fails the first ``n_failures`` run() calls, then delegates to a
+    real LocalBackend."""
+
+    name = "local"
+
+    def __init__(self, n_failures):
+        self.n_failures = n_failures
+        self.calls = 0
+        self._real = LocalBackend()
+
+    def run(self, d):
+        self.calls += 1
+        if self.calls <= self.n_failures:
+            raise RuntimeError(f"transient device loss #{self.calls}")
+        return self._real.run(d)
+
+
+class _DeadMesh(Backend):
+    """A mesh backend whose devices are gone: every run() raises."""
+
+    name = "mesh"
+
+    def run(self, d):
+        raise RuntimeError("DEVICE_UNAVAILABLE: lane host rebooted")
+
+
+class _SlowBackend(Backend):
+    name = "local"
+
+    def run(self, d):
+        time.sleep(30.0)
+
+
+def test_retry_recovers_from_transient_failure():
+    cells = _rate_cells(n_policies=1)
+    plan = plan_sweep(cells)
+    flaky = _FlakyBackend(n_failures=2)
+    res = execute(plan, flaky,
+                  retry=RetryPolicy(max_retries=2, backoff_s=0.0))
+    assert res.meta["retried_dispatches"] == 2
+    assert res.meta["degraded_chunks"] == []
+    _accum_equal(res.accum, sweep(cells).accum)
+
+
+def test_retry_exhaustion_raises_chunk_execution_error():
+    plan = plan_sweep(_rate_cells(n_policies=1))
+    flaky = _FlakyBackend(n_failures=10)
+    with pytest.raises(ChunkExecutionError, match="after 2 attempts"):
+        execute(plan, flaky,
+                retry=RetryPolicy(max_retries=1, backoff_s=0.0))
+    assert flaky.calls == 2      # 1 attempt + 1 retry, local: no degradation
+
+
+def test_mesh_failure_degrades_to_local():
+    cells = _rate_cells()
+    plan = plan_sweep(cells)
+    res = execute(plan, _DeadMesh(),
+                  retry=RetryPolicy(max_retries=1, backoff_s=0.0))
+    assert res.meta["degraded_chunks"] == list(range(plan.n_dispatches))
+    assert res.meta["retried_dispatches"] == plan.n_dispatches  # 1 retry each
+    _accum_equal(res.accum, sweep(cells).accum)   # results: as if local
+
+
+def test_degradation_opt_out_fails_the_sweep():
+    plan = plan_sweep(_rate_cells(n_policies=1))
+    with pytest.raises(ChunkExecutionError, match="mesh"):
+        execute(plan, _DeadMesh(),
+                retry=RetryPolicy(max_retries=0, backoff_s=0.0,
+                                  degrade=False))
+
+
+def test_call_with_timeout_raises_chunk_timeout():
+    with pytest.raises(ChunkTimeout, match="wall timeout"):
+        _call_with_timeout(lambda: time.sleep(30.0), 0.05, "chunk 0")
+    assert _call_with_timeout(lambda: 42, 5.0, "chunk 0") == 42
+    assert _call_with_timeout(lambda: 42, None, "chunk 0") == 42
+
+
+def test_timeout_surfaces_through_retry_ladder():
+    plan = plan_sweep(_rate_cells(n_policies=1))
+    with pytest.raises(ChunkExecutionError, match="wall timeout"):
+        execute(plan, _SlowBackend(),
+                retry=RetryPolicy(max_retries=0, backoff_s=0.0,
+                                  timeout_s=0.1, degrade=False))
+
+
+# --------------------------------------------------------- invariant guards
+def _totals(**kw) -> RunTotals:
+    t = RunTotals()
+    t.requests = 100
+    t.work_cpu_s = 50.0
+    t.work_on_fpga_cpu_s = 30.0
+    t.work_on_cpu_cpu_s = 20.0
+    t.energy_j = 1000.0
+    t.fpga_busy_j = 400.0
+    t.cpu_busy_j = 300.0
+    for k, v in kw.items():
+        setattr(t, k, v)
+    return t
+
+
+def test_check_totals_passes_clean_record():
+    check_totals(_totals())
+
+
+@pytest.mark.parametrize("field,value,invariant", [
+    ("energy_j", float("nan"), "finite"),
+    ("cost_usd", float("inf"), "finite"),
+    ("energy_j", -1.0, "non_negative"),
+    ("retries", -3, "non_negative"),
+    ("deadline_misses", 101, "request_conservation"),
+    ("work_on_cpu_cpu_s", 99.0, "request_conservation"),  # served >> offered
+    ("recovered_requests", 1, "resilience_reconciled"),   # > crashes (0)
+    ("retries", 1, "resilience_reconciled"),              # > failed_spinups
+    ("fpga_idle_j", 900.0, "energy_components"),          # sum > energy_j
+])
+def test_check_totals_catches_violations(field, value, invariant):
+    with pytest.raises(InvariantViolation) as e:
+        check_totals(_totals(**{field: value}), where="unit")
+    assert e.value.invariant == invariant
+    assert e.value.where == "unit"
+
+
+def test_check_totals_failure_misses_reconciled():
+    t = _totals(deadline_misses=5)
+    t.failure_misses = 6
+    with pytest.raises(InvariantViolation) as e:
+        check_totals(t)
+    assert e.value.invariant == "resilience_reconciled"
+
+
+class _NaNBackend(Backend):
+    """Returns a structurally valid Accum poisoned with one NaN — the
+    guard inside execute() must catch it by default."""
+
+    name = "local"
+
+    def run(self, d):
+        leaves = [np.zeros((d.chunk,), np.float32)
+                  for _ in Accum._fields]
+        leaves[0][0] = np.nan        # fpga_busy_j of the first cell
+        return Accum(*leaves)
+
+
+def test_execute_guards_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_SKIP_INVARIANTS", raising=False)
+    plan = plan_sweep(_rate_cells(n_policies=1))
+    with pytest.raises(InvariantViolation) as e:
+        execute(plan, _NaNBackend())
+    assert e.value.invariant == "finite"
+
+    # the documented opt-outs: env var, or validate=False
+    monkeypatch.setenv("REPRO_SKIP_INVARIANTS", "1")
+    res = execute(plan, _NaNBackend())
+    assert np.isnan(np.asarray(res.accum.fpga_busy_j)).any()
+    monkeypatch.delenv("REPRO_SKIP_INVARIANTS")
+    res = execute(plan, _NaNBackend(), validate=False)
+    assert np.isnan(np.asarray(res.accum.fpga_busy_j)).any()
+
+
+def test_real_sweeps_pass_guards_and_poisoned_results_fail():
+    res = sweep(_rate_cells())            # guards ran inside execute()
+    check_sweep_result(res)               # and pass standalone too
+    np.asarray(res.accum.missed_requests)[0] = \
+        float(np.asarray(res._requests)[0]) + 1
+    with pytest.raises(InvariantViolation) as e:
+        check_sweep_result(res)
+    assert e.value.invariant == "request_conservation"
+
+
+def test_check_drift_bounds():
+    a, b = _totals(), _totals()
+    check_drift(a, b)                     # identical: fine
+    b2 = _totals(energy_j=1200.0)         # 20% energy drift > 5% rtol
+    with pytest.raises(InvariantViolation) as e:
+        check_drift(a, b2)
+    assert e.value.invariant == "drift"
+    b3 = _totals(requests=101)            # counts must match exactly
+    with pytest.raises(InvariantViolation, match="requests"):
+        check_drift(a, b3)
+
+
+# ---------------------------------------------- fail-fast cell validation
+def test_sweep_cell_validation():
+    good = np.ones(10, np.float32)
+    with pytest.raises(ValueError, match="1-D"):
+        SweepCell("spork", counts=np.ones((2, 5)), size_s=0.1)
+    with pytest.raises(ValueError, match="non-negative"):
+        SweepCell("spork", counts=-good, size_s=0.1)
+    with pytest.raises(ValueError, match="size_s"):
+        SweepCell("spork", counts=good, size_s=0.0)
+    with pytest.raises(ValueError, match="size_s"):
+        SweepCell("spork", counts=good, size_s=float("nan"))
+    with pytest.raises(ValueError, match="energy_weight"):
+        SweepCell("spork", counts=good, size_s=0.1,
+                  energy_weight=float("inf"))
+    with pytest.raises(ValueError, match="headroom"):
+        SweepCell("spork", counts=good, size_s=0.1, headroom=-1)
+    with pytest.raises(ValueError, match="seed"):
+        SweepCell("spork", counts=good, size_s=0.1, seed=np.arange(3))
+
+
+def test_event_cell_validation():
+    t = np.linspace(0.0, 9.0, 10)
+    with pytest.raises(ValueError, match="1-D"):
+        EventCell("spork", arrival_times=t.reshape(2, 5), size_s=0.1)
+    with pytest.raises(ValueError, match="sorted"):
+        EventCell("spork", arrival_times=t[::-1].copy(), size_s=0.1)
+    with pytest.raises(ValueError, match="non-negative|finite"):
+        EventCell("spork", arrival_times=t - 5.0, size_s=0.1)
+    with pytest.raises(ValueError, match="size_s"):
+        EventCell("spork", arrival_times=t, size_s=-1.0)
+    with pytest.raises(ValueError, match="horizon_s"):
+        EventCell("spork", arrival_times=t, size_s=0.1, horizon_s=0.0)
+    with pytest.raises(ValueError, match="seed"):
+        EventCell("spork", arrival_times=t, size_s=0.1,
+                  seed=np.arange(2))
+
+
+def test_scenario_spec_validation():
+    from repro.workloads.scenarios import ScenarioSpec
+    with pytest.raises(ValueError, match="kind"):
+        ScenarioSpec("bad", kind="nope")
+    with pytest.raises(ValueError, match="horizon_s"):
+        ScenarioSpec("bad", kind="diurnal", horizon_s=0)
+    with pytest.raises(ValueError, match="request_size_s"):
+        ScenarioSpec("bad", kind="diurnal", request_size_s=-0.1)
+    with pytest.raises(ValueError, match="mean_demand_workers"):
+        ScenarioSpec("bad", kind="diurnal",
+                     mean_demand_workers=float("nan"))
+
+
+# ------------------------------------------------- crash-safe results emit
+def test_atomic_write_and_quarantine(tmp_path, monkeypatch, capsys):
+    from benchmarks import common
+
+    target = tmp_path / "BENCH_sweep.json"
+    common.atomic_write_json(str(target), {"a": 1})
+    assert json.loads(target.read_text()) == {"a": 1}
+    # no temp droppings left behind
+    assert [p.name for p in tmp_path.iterdir()] == ["BENCH_sweep.json"]
+
+    # a corrupt file (killed mid-write under the OLD non-atomic scheme)
+    # is quarantined, not silently clobbered — and record_sweep recovers
+    target.write_text('{"a": 1, "b": TRUNC')
+    monkeypatch.setattr(common, "SWEEP_JSON", str(target))
+    assert common._load_sweep() == {}
+    assert (tmp_path / "BENCH_sweep.json.corrupt").exists()
+    common.record_sweep("suite_x", wall_s=1.5, n_rows=3)
+    data = json.loads(target.read_text())
+    assert data["suite_x"]["rows"] == 3
+    assert data["suite_x"]["history"][-1]["wall_s"] == 1.5

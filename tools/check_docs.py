@@ -13,9 +13,10 @@ Validates that the documentation layer stays tethered to the code:
      `repro.sim.sweep.sweep_events`) have the attribute defined in the
      resolved module;
   5. every markdown-file mention in `src/` / `benchmarks/` / `tools/` /
-     `examples/` Python sources (docstrings and comments — e.g. "see
-     EXPERIMENTS.md §Perf") resolves to a real file at the repo root or
-     under docs/, so doc references in code can't rot silently;
+     `examples/` / `tests/` Python sources (docstrings and comments —
+     e.g. "see EXPERIMENTS.md §Perf") resolves to a real file at the
+     repo root or under docs/, so doc references in code can't rot
+     silently;
   6. every `tests/*.py` mention in those same Python sources (e.g. a
      module promising "exercised in tests/test_ft.py") names a test
      file that actually exists, so code can't point at deleted or
@@ -55,7 +56,7 @@ MD_BARE_IN_PY_RE = re.compile(r"(?<![\w/-])([A-Za-z][\w.-]*\.md)\b")
 # test-file mentions in Python sources: tests/test_ft.py etc.
 TESTS_IN_PY_RE = re.compile(r"\b(tests/[\w/-]+\.py)\b")
 
-PY_SCAN_DIRS = ("src", "benchmarks", "tools", "examples")
+PY_SCAN_DIRS = ("src", "benchmarks", "tools", "examples", "tests")
 
 
 def fail(errors: list[str], msg: str) -> None:
