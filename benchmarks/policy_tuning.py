@@ -1,0 +1,68 @@
+"""Policy tuning: gradient descent through the rate simulator vs the
+§5.1 grid search.
+
+For each trace, runs both tuners on the fpga_dynamic family and
+records: the selected headroom, the true objective
+(`repro.policies.tune.objective_of`: energy + lexicographic-scale miss
+penalty), wall time, and how many real-simulator evaluations each
+spent. The gradient tuner's contract — match or beat the grid optimum
+on the true objective — is asserted here and recorded per row; a
+summary entry lands in results/BENCH_sweep.json
+(``policy_tuning_meta``).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.policies.tune import objective_of, tune_gradient
+from repro.sim.ratesim import tune_fpga_dynamic
+
+from benchmarks.common import FAST, fast_params, record_kv
+
+
+def run() -> list[dict]:
+    n_traces, horizon, _ = fast_params()
+    biases = (0.55, 0.65) if FAST else (0.5, 0.6, 0.7)
+    steps = 120 if FAST else 300
+    rows = []
+    beat, matched = 0, 0
+    for bias in biases:
+        for seed in range(n_traces):
+            tr = synthetic_trace(seed=seed, bias=bias, horizon_s=horizon,
+                                 request_size_s=0.05,
+                                 mean_demand_workers=100.0)
+            t0 = time.time()
+            gh, gtot = tune_fpga_dynamic(tr.counts, tr.request_size_s,
+                                         DEFAULT_FLEET)
+            t_grid = time.time() - t0
+            t0 = time.time()
+            res = tune_gradient(tr.counts, tr.request_size_s, DEFAULT_FLEET,
+                                steps=steps)
+            t_grad = time.time() - t0
+            gobj = objective_of(gtot)
+            assert res.objective <= gobj, (
+                f"gradient tuner lost to grid on bias={bias} seed={seed}: "
+                f"{res.objective} > {gobj}")
+            beat += res.objective < gobj
+            matched += res.objective == gobj
+            rows.append({
+                "bias": bias, "seed": seed,
+                "grid_headroom": int(gh), "grad_headroom": res.headroom,
+                "grid_objective_j": round(gobj, 1),
+                "grad_objective_j": round(res.objective, 1),
+                "source": res.source, "sim_evals": res.n_sim_evals,
+                "wall_grid_s": round(t_grid, 3),
+                "wall_grad_s": round(t_grad, 3),
+            })
+    record_kv("policy_tuning_meta", fast=FAST, n_rows=len(rows),
+              beat_grid=beat, matched_grid=matched,
+              match_or_beat_all=True, steps=steps)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -21,8 +21,9 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
 def main() -> None:
     from benchmarks import (chaos_suite, fig2_pareto, fig4_spork_vs_mark,
                             fig5_sensitivity, fig6_worker_efficiency,
-                            fig7_request_sizes, roofline, scenario_suite,
-                            table8_production, table9_dispatch, warmup)
+                            fig7_request_sizes, policy_tuning, roofline,
+                            scenario_suite, table8_production,
+                            table9_dispatch, warmup)
     from benchmarks.common import emit, timed
     from repro.sim.harness import invariants_enabled
 
@@ -44,6 +45,7 @@ def main() -> None:
         ("fig5_sensitivity", fig5_sensitivity.run),
         ("fig6_worker_efficiency", fig6_worker_efficiency.run),
         ("fig7_request_sizes", fig7_request_sizes.run),
+        ("policy_tuning", policy_tuning.run),
         ("roofline", roofline.run),
     ]
     for name, fn in suites:

@@ -1,0 +1,80 @@
+"""repro.policies — policy-as-plugin layer (ROADMAP item 2).
+
+A policy is a frozen dataclass (static structure: hashable jit
+argument, plan group key) + a `RateParams` pytree of traced parameters
++ pure step functions. Both DES engines and the rate simulator consume
+the same objects; registries admit new policies without touching any
+engine. See `repro.policies.base` for the contract,
+docs/architecture.md "Policy layer" for the design, and
+tests/test_policy_equivalence.py for the bit-identity lockdown against
+the pre-plugin engines.
+
+Public surface:
+
+  * `get_rate_policy(name_or_obj)` / `get_dispatch_policy(name_or_obj)`
+    — resolution used by every engine entry point (str APIs unchanged).
+  * `rate_policy_names()` / `dispatch_policy_names()` — registered
+    names, registration order (dispatch order == traced codes).
+  * `register_rate(p)` / `register_dispatch(p)` — plugin points.
+  * `RateParams` — the traced parameter pytree; `repro.policies.tune`
+    gradient-tunes it through the rate simulator.
+"""
+
+from repro.policies.base import (DISPATCH_REGISTRY, RATE_REGISTRY,
+                                 Candidates, DispatchPolicy, RateCtx,
+                                 RateParams, RatePolicy)
+from repro.policies import des as _des  # noqa: F401  (registers dispatch)
+from repro.policies import rate as _rate  # noqa: F401  (registers rate)
+from repro.policies.des import dispatch_select
+
+__all__ = [
+    "Candidates", "DispatchPolicy", "RateCtx", "RateParams", "RatePolicy",
+    "dispatch_policies", "dispatch_policy_names", "dispatch_select",
+    "get_dispatch_policy", "get_rate_policy", "rate_policies",
+    "rate_policy_names", "register_dispatch", "register_rate",
+]
+
+
+def get_rate_policy(policy) -> RatePolicy:
+    """Resolve a rate policy by name, or pass an instance through.
+    Raises ValueError for unknown names (the engines' fail-fast path)."""
+    return RATE_REGISTRY.get(policy)
+
+
+def get_dispatch_policy(policy) -> DispatchPolicy:
+    """Resolve a dispatch policy by name, or pass an instance through."""
+    return DISPATCH_REGISTRY.get(policy)
+
+
+def rate_policy_names() -> tuple[str, ...]:
+    return RATE_REGISTRY.names()
+
+
+def dispatch_policy_names() -> tuple[str, ...]:
+    return DISPATCH_REGISTRY.names()
+
+
+def rate_policies() -> tuple[RatePolicy, ...]:
+    return RATE_REGISTRY.all()
+
+
+def dispatch_policies() -> tuple[DispatchPolicy, ...]:
+    return DISPATCH_REGISTRY.all()
+
+
+def register_rate(policy: RatePolicy) -> RatePolicy:
+    """Register a new rate policy object (unique name required). The
+    sweep planner, both backends and the public `ratesim` entry points
+    pick it up immediately."""
+    return RATE_REGISTRY.register(policy)
+
+
+def register_dispatch(policy: DispatchPolicy) -> DispatchPolicy:
+    """Register a new dispatch policy object (unique name AND unique
+    traced code required — the batched engine folds `combine` rules
+    under the code)."""
+    for p in DISPATCH_REGISTRY.all():
+        if p.code == policy.code:
+            raise ValueError(
+                f"dispatch code {policy.code} already taken by {p.name!r}")
+    return DISPATCH_REGISTRY.register(policy)

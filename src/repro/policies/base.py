@@ -1,0 +1,236 @@
+"""Policy-as-plugin base layer: params pytrees, traced interfaces, registries.
+
+The paper's contribution is the *scheduler policy* (Spork's
+efficient-first dispatch, Alg. 1-2 allocation), but until this package
+the policies were string-dispatched ``if policy == ...`` branches
+hard-wired into three engines. This module defines the plugin contract
+that replaces them:
+
+  A policy = a **frozen dataclass** (its *static structure* — hashable,
+  so it can be a jit static argument and a plan group key) + a **params
+  pytree** of traced leaves (`RateParams` — tunable without
+  recompilation, differentiable end to end) + **pure step functions**
+  with a slim traced interface.
+
+Two policy families, matching the two simulator levels:
+
+  * `RatePolicy` — fluid-level allocation + serving policies consumed by
+    `repro.sim.ratesim` (`dispatch_step` serves one second of demand,
+    `allocator_tick` is the start-of-interval allocation decision).
+    Static structure = the policy object itself (class + fields); traced
+    per-cell parameters ride in `RateParams` so a sweep over headroom or
+    forecast gain reuses one compiled program.
+  * `DispatchPolicy` — per-request dispatch rules (paper Alg. 3 / Table
+    9) consumed by BOTH DES engines: `find_worker` / `find_worker_f`
+    drive the serial `repro.sim.events.EventSim` oracle, and `combine`
+    is the pure traced rule the batched `repro.sim.events_batched`
+    engine selects by the policy's integer ``code``. The code stays a
+    *traced* integer there on purpose: all dispatch policies share one
+    compiled program (the benchmark dispatch-count guards rely on it).
+
+Registries map names -> singleton policy objects. `register_rate` /
+`register_dispatch` admit new policies without touching any engine;
+`get_rate_policy` / `get_dispatch_policy` accept either a name or a
+policy object, so every engine entry point keeps its string API.
+
+Equivalence contract: porting the built-in policies onto this layer
+changed no numbers — tests/test_policy_equivalence.py pins every
+registered policy against goldens generated from the pre-refactor
+string-dispatch engines (tests/goldens/policy_goldens.json).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class RateParams(NamedTuple):
+    """Traced per-cell rate-policy parameters (the tunable pytree).
+
+    Every leaf is consumed by at least one policy and ignored (
+    numerically inert) by the rest, so the pytree structure — and with
+    it the compiled program — is shared across policies and parameter
+    values. `repro.policies.tune` differentiates through the simulator
+    w.r.t. a smooth relaxation of these leaves.
+    """
+
+    headroom: jnp.ndarray      # i32 — fpga_dynamic/predictive spare capacity
+    static_level: jnp.ndarray  # i32 — fpga_static provisioning level
+    gain: jnp.ndarray          # f32 — predictive forecast gain
+
+    @staticmethod
+    def make(headroom: int = 0, static_level: int = 0,
+             gain: float = 1.0) -> "RateParams":
+        return RateParams(jnp.int32(headroom), jnp.int32(static_level),
+                          jnp.float32(gain))
+
+
+class RateCtx(NamedTuple):
+    """Per-invocation context threaded to every `RatePolicy` method:
+    the static scan configuration (python ints — they set ring sizes and
+    scan lengths) plus the traced fleet scalars and objective terms."""
+
+    interval_s: int            # scheduling interval (static)
+    spin_up_s: int             # FPGA spin-up seconds (static)
+    n_max: int                 # worker-count cap (static)
+    fs: Any                    # ratesim.FleetScalars (traced leaves)
+    size_s: Any                # request service time on a CPU (traced)
+    coeffs: Any                # Alg. 2 ObjectiveCoeffs (traced)
+    tb: Any                    # breakeven threshold (traced)
+
+
+@dataclass(frozen=True)
+class RatePolicy:
+    """Base fluid-level policy: CPU-fallback serving, 1 s CPU linger,
+    idle-timeout reclaim, no allocation. Frozen + hashable, so an
+    instance is a jit static argument and a plan group key; its repr is
+    stable, so checkpoint chunk fingerprints are too.
+
+    Subclasses override the pure methods below; every method takes the
+    `RateCtx` + `RateParams` pair and must stay traced (no host
+    side-effects) — `ratesim._simulate_core` calls them under vmap/jit.
+    """
+
+    name: str = "base"
+
+    # --- static structure flags (class attributes: part of the class
+    # identity jit already keys on, not dataclass fields) ---
+    #: carries the Alg. 2 per-level lifetime stats + conditional
+    #: histogram (O(n_max^2) state); everything else gets placeholders.
+    uses_predictor = False
+    #: dynamics independent of interval/spin-up latency: the planner
+    #: regroups these cells under one canonical static key.
+    latency_free = False
+
+    # ---- serving (inside ratesim._second_step) ----
+    def dispatch_step(self, ctx: RateCtx, params: RateParams, state,
+                      W, arrivals, up, dt):
+        """Serve one second of demand ``W`` (CPU-seconds) given ``up``
+        spun-up FPGAs. Returns (fpga_work, cpu_work, queue, missed)."""
+        cap_f = up.astype(jnp.float32) * ctx.fs.S * dt
+        fpga_work = jnp.minimum(W, cap_f)
+        cpu_work = W - fpga_work
+        return fpga_work, cpu_work, state.queue, jnp.float32(0.0)
+
+    def cpu_keep(self, state, up, arrivals, n_cpu):
+        """On-demand CPU pool linger rule. Returns (cpu_alive,
+        cpu_prev_next): CPUs drawing power this second, and the value
+        carried as ``state.cpu_prev``."""
+        return jnp.maximum(n_cpu, state.cpu_prev), n_cpu
+
+    # ---- idle reclaim (inside ratesim._second_step) ----
+    def reclaim(self, ctx: RateCtx, params: RateParams, used_ring,
+                young_ring, up, used_f):
+        """FPGAs to deallocate this second (idle-timeout rule)."""
+        protected = jnp.maximum(jnp.max(used_ring), jnp.sum(young_ring))
+        protected = self.protect(ctx, params, protected, used_f)
+        return jnp.maximum(up - protected, 0)
+
+    def protect(self, ctx: RateCtx, params: RateParams, protected, used_f):
+        """Extra reclaim protection floor (autoscaler headroom)."""
+        return protected
+
+    # ---- allocation ----
+    def init_alloc(self, ctx: RateCtx, params: RateParams, counts):
+        """Warm-start allocation before the trace begins. ``counts`` is
+        the (k, interval_s) reshaped arrival matrix. Returns (init_up,
+        init_spinups) — spin-up energy/cost is charged by the caller."""
+        return jnp.int32(0), jnp.float32(0.0)
+
+    def allocator_tick(self, ctx: RateCtx, params: RateParams, state, xs):
+        """Start-of-interval allocation decision (Alg. 1 for Spork).
+        ``xs = (next_true_needed, next_W, next2_W)`` are lookahead
+        inputs (ideal variants only). Returns the new SimState; MUST
+        zero the F_acc/C_acc interval accumulators."""
+        raise NotImplementedError(self.name)
+
+
+class Candidates(NamedTuple):
+    """Per-arrival candidate summary the batched DES hands to
+    `DispatchPolicy.combine`: winner one-hots and feasibility flags for
+    each (type x ready/pending) candidate group and the round-robin
+    ring, all computed once and shared by every policy (the three
+    reductions in `events_batched._find_candidates`)."""
+
+    f_found: jnp.ndarray     # any feasible FPGA (ready or pending)
+    c_found: jnp.ndarray     # any feasible CPU
+    av_f: jnp.ndarray        # winning FPGA availability (busiest-first key)
+    av_c: jnp.ndarray        # winning CPU availability
+    oh_f: jnp.ndarray        # (W,) one-hot: winning FPGA slot
+    oh_c: jnp.ndarray        # (W,) one-hot: winning CPU slot
+    rr_found: jnp.ndarray    # any feasible ring worker
+    oh_rr: jnp.ndarray       # (W,) one-hot: winning ring slot
+
+
+@dataclass(frozen=True)
+class DispatchPolicy:
+    """Per-request dispatch rule (paper Alg. 3 variants, Table 9).
+
+    One object drives both DES engines: the serial oracle calls
+    `find_worker` / `find_worker_f` (which may use the sim's candidate
+    helpers and cursor state), the batched engine evaluates every
+    registered policy's pure `combine` on the shared `Candidates` and
+    selects by the traced integer ``code`` (`repro.policies.des.
+    dispatch_select`) so all policies share one compiled program."""
+
+    name: str = "base"
+    code: int = -1           # traced-select code (stable, registry-unique)
+
+    # ---- serial oracle (repro.sim.events.EventSim) ----
+    def find_worker(self, sim):
+        """Pick a worker on the pristine path (no failure model)."""
+        raise NotImplementedError(self.name)
+
+    def find_worker_f(self, sim):
+        """Failure-aware twin: straggler-scaled feasibility, evacuated
+        workers skipped."""
+        raise NotImplementedError(self.name)
+
+    # ---- batched engine (repro.sim.events_batched) ----
+    def combine(self, cand: Candidates):
+        """Pure traced rule: combine the shared candidate groups into
+        this policy's pick. Returns (found, oh_winner)."""
+        raise NotImplementedError(self.name)
+
+
+class PolicyRegistry:
+    """Name -> singleton policy objects for one policy family."""
+
+    def __init__(self, family: str, base: type):
+        self._family = family
+        self._base = base
+        self._by_name: dict[str, Any] = {}
+
+    def register(self, policy):
+        if not isinstance(policy, self._base):
+            raise TypeError(f"{self._family} policy must be a "
+                            f"{self._base.__name__}, got {policy!r}")
+        if policy.name in self._by_name:
+            raise ValueError(
+                f"duplicate {self._family} policy name {policy.name!r}")
+        self._by_name[policy.name] = policy
+        return policy
+
+    def get(self, policy):
+        """Resolve a name or pass a policy object through."""
+        if isinstance(policy, self._base):
+            return policy
+        try:
+            return self._by_name[policy]
+        except (KeyError, TypeError):
+            raise ValueError(
+                f"unknown policy {policy!r} (registered {self._family} "
+                f"policies: {sorted(self._by_name)})") from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._by_name)
+
+    def all(self) -> tuple:
+        return tuple(self._by_name.values())
+
+
+RATE_REGISTRY = PolicyRegistry("rate", RatePolicy)
+DISPATCH_REGISTRY = PolicyRegistry("dispatch", DispatchPolicy)

@@ -1,0 +1,300 @@
+"""Rate-level policies (fluid simulator): the six paper policies as
+plugin objects plus the predictive spin-up policy the plugin layer
+unlocks.
+
+Every method body here was moved VERBATIM from the string-dispatch
+branches of `ratesim._second_step` / `_interval_tick` (PR 7, commit
+fa2a726); tests/test_policy_equivalence.py pins each policy against
+goldens generated from that code, so the port is bit-identity-safe.
+
+Policy map (paper §5.1 / Table 4):
+
+  * `Spork` — Alg. 1-2: NeededFPGAs breakeven rounding, conditional-
+    histogram prediction, per-level lifetime amortization; CPU fallback
+    on the dispatch path.
+  * `SporkIdeal` — perfect next-interval demand knowledge; no predictor
+    state.
+  * `CpuDynamic` — never allocates FPGAs; pure on-demand CPUs.
+  * `FpgaStatic` — provision once for peak, never reclaim; FPGA-only
+    FIFO queue with deadline misses.
+  * `FpgaDynamic` — reactive autoscaler ("long-term" row of Table 4):
+    capacity for the load just observed + fixed headroom.
+  * `MarkIdeal` — MArk [93] with 2-interval oracle lookahead and
+    round-robin serving.
+  * `PredictiveSpinUp` (new) — acts on a short-horizon linear-trend
+    forecast of the observed load instead of the load itself:
+    ``lam_hat = lam + gain * (lam - lam_prev)`` (the discrete slope of
+    the b-model demand curve), so capacity for a rising burst is
+    requested one interval earlier than `FpgaDynamic` asks for it. The
+    forecast gain rides in `RateParams.gain` (traced — tunable by
+    `repro.policies.tune` without recompilation).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.predictor import (allocator_tick_jnp,
+                                  lifetime_update_from_rings)
+from repro.policies.base import (RATE_REGISTRY, RateCtx, RateParams,
+                                 RatePolicy)
+
+
+def needed_fpgas(lam, interval_s, tb):
+    """Alg. 1 NeededFPGAs: floor + breakeven rounding. lam in FPGA-seconds."""
+    n = jnp.floor(lam / interval_s)
+    frac = lam - n * interval_s
+    return (n + (frac > tb)).astype(jnp.int32)
+
+
+def _zero_interval(state):
+    return dict(F_acc=jnp.float32(0), C_acc=jnp.float32(0))
+
+
+def _provision(ctx: RateCtx, state, target):
+    """Shared allocation tail: clip the request to capacity, schedule
+    the spin-ups one spin-up latency out, charge the spin-up counter."""
+    n_curr = state.up + jnp.sum(state.pending)
+    new = jnp.maximum(target - n_curr, 0)
+    new = jnp.minimum(new, ctx.n_max - 1 - n_curr)
+    pending = state.pending.at[ctx.spin_up_s - 1].add(new)
+    acc = state.accum._replace(
+        fpga_spinups=state.accum.fpga_spinups + new.astype(jnp.float32))
+    return pending, acc
+
+
+@dataclass(frozen=True)
+class _FpgaOnly(RatePolicy):
+    """Serving rule for policies with no CPU fallback: FIFO fluid
+    queue; a request misses when its queueing delay exceeds
+    deadline - service time."""
+
+    def dispatch_step(self, ctx, params, state, W, arrivals, up, dt):
+        cap_f = up.astype(jnp.float32) * ctx.fs.S * dt
+        backlog = state.queue + W
+        fpga_work = jnp.minimum(backlog, cap_f)
+        cpu_work = jnp.float32(0.0)
+        queue = backlog - fpga_work
+        slack = 10.0 * ctx.size_s - ctx.size_s / ctx.fs.S
+        delay = queue / jnp.maximum(cap_f, 1e-6)
+        missed = jnp.where(delay > slack, arrivals.astype(jnp.float32), 0.0)
+        return fpga_work, cpu_work, queue, missed
+
+
+@dataclass(frozen=True)
+class Spork(RatePolicy):
+    """Alg. 1-2: breakeven rounding + conditional-histogram prediction
+    + lifetime amortization, CPU fallback on the dispatch path."""
+
+    name: str = "spork"
+    ideal = False
+    uses_predictor = True
+
+    def allocator_tick(self, ctx, params, state, xs):
+        next_true_needed, _, _ = xs
+        n_curr = state.up + jnp.sum(state.pending)
+        if self.ideal:
+            # Perfect information: the conditional histogram and
+            # lifetime stats are never consulted, so none of the
+            # predictor state is carried or updated (H/life are
+            # (1,)-shaped placeholders).
+            target = jnp.minimum(next_true_needed, ctx.n_max - 1)
+            H, n_lag = state.H, state.n_lag
+        else:
+            # Fold the previous interval's per-second push/pop counts
+            # into the per-level lifetime stats (the stats are only read
+            # here, so replaying the rings at the tick is exact and
+            # keeps the per-second scan free of O(n_max) bookkeeping).
+            alloc_time, life_sum, life_cnt = lifetime_update_from_rings(
+                state.alloc_time, state.life_sum, state.life_cnt,
+                state.young_ring, state.dealloc_ring, state.up, state.t)
+            state = state._replace(alloc_time=alloc_time, life_sum=life_sum,
+                                   life_cnt=life_cnt)
+            lam = state.F_acc + state.C_acc / ctx.fs.S      # FPGA-seconds
+            # one shared Alg. 1+2 tick (NeededFPGAs rounding + histogram
+            # observe + lag shift + predict) — same entry point the
+            # batched DES uses, so the two engines cannot drift
+            H, n_lag, target = allocator_tick_jnp(
+                state.H, life_sum, life_cnt, state.n_lag, lam, n_curr,
+                ctx.coeffs, jnp.float32(ctx.interval_s), ctx.tb)
+        pending, acc = _provision(ctx, state, target)
+        return state._replace(pending=pending, H=H, n_lag=n_lag, accum=acc,
+                              **_zero_interval(state))
+
+
+@dataclass(frozen=True)
+class SporkIdeal(Spork):
+    name: str = "spork_ideal"
+    ideal = True
+    uses_predictor = False
+
+
+@dataclass(frozen=True)
+class CpuDynamic(RatePolicy):
+    """On-demand CPUs only; never allocates FPGAs."""
+
+    name: str = "cpu_dynamic"
+    latency_free = True
+
+    def allocator_tick(self, ctx, params, state, xs):
+        return state._replace(**_zero_interval(state))
+
+
+@dataclass(frozen=True)
+class FpgaStatic(_FpgaOnly):
+    """Provision `RateParams.static_level` once (warm, before the trace
+    starts), never reclaim."""
+
+    name: str = "fpga_static"
+    latency_free = True
+
+    def reclaim(self, ctx, params, used_ring, young_ring, up, used_f):
+        return jnp.int32(0)
+
+    def allocator_tick(self, ctx, params, state, xs):
+        fs = ctx.fs
+        n_curr = state.up + jnp.sum(state.pending)
+        new = jnp.maximum(params.static_level - n_curr, 0)
+        # provisioned before the trace starts: arrives immediately (warm),
+        # spin-up energy/cost still charged below via accounting.
+        up = state.up + new
+        acc = state.accum
+        acc = acc._replace(
+            spin_j=acc.spin_j + new.astype(jnp.float32) * fs.B_f * fs.A_f_s,
+            cost=acc.cost + new.astype(jnp.float32) * fs.C_f * fs.A_f_s,
+            fpga_spinups=acc.fpga_spinups + new.astype(jnp.float32))
+        return state._replace(up=up, accum=acc, **_zero_interval(state))
+
+
+@dataclass(frozen=True)
+class FpgaDynamic(_FpgaOnly):
+    """Reactive autoscaler at allocation-interval granularity (Table 4,
+    "long-term"): minimum FPGAs for the load just observed + fixed
+    headroom; spin-ups land one interval later. Downsizing via the
+    standard idle timeout (headroom is protected in `protect`)."""
+
+    name: str = "fpga_dynamic"
+
+    def protect(self, ctx, params, protected, used_f):
+        return jnp.maximum(protected, used_f + params.headroom.astype(jnp.int32))
+
+    def init_alloc(self, ctx, params, counts):
+        # starts warm (pre-warmed reactive autoscaler): initial capacity
+        # for the first second's demand + headroom, spin-up charged.
+        w0 = counts[0, 0].astype(jnp.float32) * ctx.size_s
+        init_up = (jnp.ceil(w0 / ctx.fs.S).astype(jnp.int32)
+                   + params.headroom.astype(jnp.int32))
+        return init_up, init_up.astype(jnp.float32)
+
+    def _target(self, ctx, params, state):
+        lam_prev = state.F_acc + state.C_acc / ctx.fs.S
+        needed_now = jnp.ceil(
+            lam_prev / jnp.float32(ctx.interval_s)).astype(jnp.int32)
+        return needed_now + params.headroom.astype(jnp.int32)
+
+    def allocator_tick(self, ctx, params, state, xs):
+        n_curr = state.up + jnp.sum(state.pending)
+        target = self._target(ctx, params, state)
+        new = jnp.maximum(target - n_curr, 0)
+        new = jnp.maximum(jnp.minimum(new, ctx.n_max - 1 - n_curr), 0)
+        pending = state.pending.at[ctx.spin_up_s - 1].add(new)
+        acc = state.accum._replace(
+            fpga_spinups=state.accum.fpga_spinups + new.astype(jnp.float32))
+        return state._replace(pending=pending, accum=acc,
+                              lam_hist=state.F_acc + state.C_acc / ctx.fs.S,
+                              **_zero_interval(state))
+
+
+@dataclass(frozen=True)
+class PredictiveSpinUp(FpgaDynamic):
+    """Predictive spin-up (new — ROADMAP item 2): `FpgaDynamic` acting
+    on a short-horizon forecast instead of the observed load.
+
+    At each tick the policy extrapolates the observed per-interval load
+    one interval ahead with a linear trend,
+
+        lam_hat = max(lam + gain * (lam - lam_prev), 0)
+
+    and targets capacity for ``lam_hat`` (+ headroom). With
+    ``gain = 0`` this IS `FpgaDynamic`; positive gain pre-provisions
+    rising bursts one interval earlier, trading idle energy for misses.
+    ``lam_prev`` is carried in ``SimState.lam_hist`` (numerically inert
+    for every other policy). The forecast gain is a traced
+    `RateParams.gain` leaf — `repro.policies.tune` descends on it."""
+
+    name: str = "predictive"
+
+    def _target(self, ctx, params, state):
+        lam = state.F_acc + state.C_acc / ctx.fs.S
+        lam_hat = jnp.maximum(lam + params.gain * (lam - state.lam_hist), 0.0)
+        needed = jnp.ceil(
+            lam_hat / jnp.float32(ctx.interval_s)).astype(jnp.int32)
+        return needed + params.headroom.astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class MarkIdeal(RatePolicy):
+    """MArk [93] with perfect demand knowledge two intervals ahead
+    (§5.1): round-robin serving, allocate for the next interval,
+    downsize only what neither of the next two intervals needs."""
+
+    name: str = "mark_ideal"
+
+    def dispatch_step(self, ctx, params, state, W, arrivals, up, dt):
+        # Round-robin split: each up worker receives an equal request share.
+        cap_f = up.astype(jnp.float32) * ctx.fs.S * dt
+        n_c_prev = state.cpu_prev.astype(jnp.float32)
+        n_tot = up.astype(jnp.float32) + n_c_prev
+        share_c = jnp.where(n_tot > 0, n_c_prev / jnp.maximum(n_tot, 1.0), 0.0)
+        cpu_work0 = jnp.minimum(W * share_c, n_c_prev * dt)
+        fpga_work = jnp.minimum(W - cpu_work0, cap_f)
+        residual = jnp.maximum(W - cpu_work0 - fpga_work, 0.0)
+        cpu_work = cpu_work0 + residual
+        return fpga_work, cpu_work, state.queue, jnp.float32(0.0)
+
+    def cpu_keep(self, state, up, arrivals, n_cpu):
+        # RR keeps every worker receiving requests alive.
+        keep = arrivals >= (up + state.cpu_prev)
+        cpu_alive = jnp.maximum(n_cpu, jnp.where(keep, state.cpu_prev, 0))
+        return cpu_alive, cpu_alive
+
+    def allocator_tick(self, ctx, params, state, xs):
+        # The predictive controller also releases surplus on-demand
+        # CPUs (cost-breakeven rounding throughout).
+        _, next_W, next2_W = xs
+        fs = ctx.fs
+        n_curr = state.up + jnp.sum(state.pending)
+        tb_cost = jnp.float32(ctx.interval_s) * fs.C_f / (fs.S * fs.C_c)
+        t1 = needed_fpgas(next_W / fs.S, jnp.float32(ctx.interval_s), tb_cost)
+        t2 = needed_fpgas(next2_W / fs.S, jnp.float32(ctx.interval_s), tb_cost)
+        target = jnp.minimum(t1, ctx.n_max - 1)
+        keep_floor = jnp.minimum(jnp.maximum(t1, t2), ctx.n_max - 1)
+        new = jnp.maximum(target - n_curr, 0)
+        drop = jnp.maximum(state.up - keep_floor, 0)
+        pending = state.pending.at[ctx.spin_up_s - 1].add(new)
+        cap_next = target.astype(jnp.float32) * fs.S * jnp.float32(ctx.interval_s)
+        cpu_needed = jnp.ceil(
+            jnp.maximum(next_W - cap_next, 0.0) / jnp.float32(ctx.interval_s)
+        ).astype(jnp.int32)
+        cpu_prev = jnp.minimum(state.cpu_prev, cpu_needed)
+        up_next = state.up - drop
+        # lifetime stats are a Spork-predictor input; mark_ideal never
+        # reads them, so skip the O(n_max) bookkeeping.
+        acc = state.accum
+        acc = acc._replace(
+            fpga_spinups=acc.fpga_spinups + new.astype(jnp.float32),
+            spin_j=acc.spin_j + drop.astype(jnp.float32) * fs.d_f,
+            cost=acc.cost + drop.astype(jnp.float32) * fs.C_f * fs.d_f_s)
+        return state._replace(pending=pending, up=up_next, accum=acc,
+                              cpu_prev=cpu_prev, **_zero_interval(state))
+
+
+SPORK = RATE_REGISTRY.register(Spork())
+SPORK_IDEAL = RATE_REGISTRY.register(SporkIdeal())
+CPU_DYNAMIC = RATE_REGISTRY.register(CpuDynamic())
+FPGA_STATIC = RATE_REGISTRY.register(FpgaStatic())
+FPGA_DYNAMIC = RATE_REGISTRY.register(FpgaDynamic())
+MARK_IDEAL = RATE_REGISTRY.register(MarkIdeal())
+PREDICTIVE = RATE_REGISTRY.register(PredictiveSpinUp())

@@ -5,7 +5,8 @@ equivalent). It models individual workers, FIFO per-worker queues,
 deadline-aware dispatch (paper Alg. 3) and the per-interval Spork
 allocator (Algs. 1-2) with the conditional-histogram predictor.
 
-Dispatch policies (paper Table 9):
+Dispatch policies are plugin objects (`repro.policies.des`; pass a
+registered name or a `DispatchPolicy` instance). Paper Table 9:
   * 'spork'         — efficient-first: FPGAs before CPUs; within a type,
                       busiest-first, then least-idle, then
                       being-allocated-with-most-queued-load.
@@ -55,8 +56,10 @@ from repro.core.workers import FleetParams
 from repro.ft.elastic import surviving
 from repro.ft.failures import (DRAW_CRASH, DRAW_EVAC, DRAW_SPINUP,
                                DRAW_STRAGGLE, FailureSpec, failure_u01)
+from repro.policies import dispatch_policy_names, get_dispatch_policy
 
-DISPATCHERS = ("spork", "index_packing", "round_robin")
+#: Registered dispatch-policy names (registration order == traced codes).
+DISPATCHERS = dispatch_policy_names()
 
 
 @dataclass
@@ -86,12 +89,12 @@ class EventSim:
                  deadline_s: float | None = None, n_max: int = 512,
                  allocate_fpgas: bool = True,
                  failures: FailureSpec | None = None):
-        assert dispatcher in DISPATCHERS
+        self.policy = get_dispatch_policy(dispatcher)   # name or object
         self.fleet = fleet
         self.size = size_s
         self.failures = failures.normalized() if failures is not None else None
         self.deadline = 10.0 * size_s if deadline_s is None else deadline_s
-        self.dispatcher = dispatcher
+        self.dispatcher = self.policy.name
         self.allocate_fpgas = allocate_fpgas
         self.tb, coeffs = objective_setup(fleet, energy_weight)
         self.predictor = Predictor(n_max, coeffs, fleet.T_s)
@@ -295,50 +298,17 @@ class EventSim:
         return best
 
     def _find_worker(self) -> _Worker | None:
+        """Delegate the per-request pick to the plugin policy
+        (`repro.policies.des`): the policy reads the candidate helpers
+        (`_try_type` / `_try_type_f`) and the round-robin cursor off
+        this sim; the failure-aware twin replicates the same rules over
+        the straggler/evacuation-aware candidate search."""
         if self.failures is not None:
-            return self._find_worker_f()
-        if self.dispatcher == "spork":
-            return self._try_type("fpga") or self._try_type("cpu")
-        if self.dispatcher == "index_packing":
-            a, b = self._try_type("fpga"), self._try_type("cpu")
-            if a and b:      # busiest-first regardless of type
-                return a if a.available_at >= b.available_at else b
-            return a or b
-        # round robin over the provisioned ring, burst CPUs as fallback
-        n = len(self.rr_ring)
-        for k in range(n):
-            wid = self.rr_ring[(self.rr_pos + k) % n]
-            w = self.workers[wid]
-            slack = self.now + self.deadline - self._service(w.kind)
-            if max(w.available_at, self.now) <= slack:
-                self.rr_pos = (self.rr_pos + k + 1) % n
-                return w
-        return self._try_type("cpu")
+            return self.policy.find_worker_f(self)
+        return self.policy.find_worker(self)
 
     def _find_worker_f(self) -> _Worker | None:
-        """Failure-aware `_find_worker`: same policy rules over the
-        failure-aware candidate search. Evacuated workers keep their ring
-        *positions* (the cursor cycles over the provisioned ring) but are
-        skipped as infeasible, exactly like the batched engine's
-        feasibility mask."""
-        if self.dispatcher == "spork":
-            return self._try_type_f("fpga") or self._try_type_f("cpu")
-        if self.dispatcher == "index_packing":
-            a, b = self._try_type_f("fpga"), self._try_type_f("cpu")
-            if a and b:
-                return a if a.available_at >= b.available_at else b
-            return a or b
-        n = len(self.rr_ring)
-        for k in range(n):
-            wid = self.rr_ring[(self.rr_pos + k) % n]
-            w = self.workers[wid]
-            if self._evac_now(w):
-                continue
-            slack = self.now + self.deadline - self._service_w(w)
-            if max(w.available_at, self.now) <= slack:
-                self.rr_pos = (self.rr_pos + k + 1) % n
-                return w
-        return self._try_type_f("cpu")
+        return self.policy.find_worker_f(self)
 
     def _assign(self, w: _Worker) -> bool:
         service = self._service_w(w)

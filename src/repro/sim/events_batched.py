@@ -78,10 +78,13 @@ from repro.core.workers import DEFAULT_FLEET, FleetParams
 from repro.ft.failures import (DRAW_CRASH, DRAW_EVAC, DRAW_SPINUP,
                                DRAW_STRAGGLE, FSTAT_OFF, FailStatic,
                                FailureSpec, failure_u01)
+from repro.policies import Candidates, dispatch_policies, dispatch_select
 from repro.sim.events import DISPATCHERS
 from repro.sim.ratesim import Accum
 
-DISPATCH_CODES = {d: i for i, d in enumerate(DISPATCHERS)}
+#: name -> traced policy code (from the registry, so plugin dispatch
+#: policies join the shared compiled program automatically)
+DISPATCH_CODES = {p.name: p.code for p in dispatch_policies()}
 
 _NEG = -jnp.inf
 
@@ -358,19 +361,19 @@ def _find_candidates(es: EventScalars, code, w_f: int, is_f, idxW,
     oh_rr = jnp.pad(feas_rr & (key.astype(jnp.float32) == kmin),
                     (0, idxW.shape[0] - w_f))
 
-    # policy select: spork efficient-first; index_packing busiest-first
-    # across types (FPGA wins exact ties); round_robin ring then CPUs.
+    # policy select: fold every registered dispatch policy's `combine`
+    # rule under the traced code, so one compiled program serves them all
+    # (spork efficient-first; index_packing busiest-first across types,
+    # FPGA wins exact ties; round_robin ring then CPUs; plugins join via
+    # repro.policies.register_dispatch).
     f_found = any_fr | (am_fp > _NEG)
     c_found = any_cr | (am_cp > _NEG)
     av_f = jnp.where(any_fr, am_fr, am_fp)
     av_c = jnp.where(any_cr, am_cr, am_cp)
-    oh_sp = jnp.where(f_found, oh_f, oh_c)
-    pick_f_ip = jnp.where(f_found & c_found, av_f >= av_c, f_found)
-    oh_ip = jnp.where(pick_f_ip, oh_f, oh_c)
-    oh_rb = jnp.where(rr_found, oh_rr, oh_c)
-    found = jnp.where(code == 2, rr_found | c_found, f_found | c_found)
-    oh_cand = jnp.where(code == 0, oh_sp,
-                        jnp.where(code == 1, oh_ip, oh_rb))
+    cand = Candidates(f_found=f_found, c_found=c_found, av_f=av_f,
+                      av_c=av_c, oh_f=oh_f, oh_c=oh_c,
+                      rr_found=rr_found, oh_rr=oh_rr)
+    found, oh_cand = dispatch_select(code, cand)
     return found, oh_cand, rr_found, n_ring, rank_win, any_free, slot_idx
 
 

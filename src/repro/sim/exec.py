@@ -50,6 +50,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.policies import RateParams
 from repro.sim import events_batched, ratesim
 from repro.sim.plan import (Accum, ChunkDispatch, EventSweepResult,
                             SweepPlan, SweepResult, accum_to_totals)
@@ -59,13 +60,18 @@ ENV_VAR = "BENCH_SWEEP_BACKEND"
 
 def _rate_args(d: ChunkDispatch) -> tuple:
     """Traced arguments for `ratesim._simulate_cells`, in order, laid
-    out exactly as the pre-plan/execute sweep loop built them."""
+    out exactly as the pre-plan/execute sweep loop built them. The
+    per-cell policy parameters (headroom, static level, forecast gain)
+    ride as one `RateParams` pytree — the policy object itself is
+    static, in ``d.static``."""
     a = d.arrays
     fs = ratesim.FleetScalars(*(jnp.asarray(a["scalars"][:, j])
                                 for j in range(a["scalars"].shape[1])))
+    params = RateParams(jnp.asarray(a["headroom"]),
+                        jnp.asarray(a["levels"]),
+                        jnp.asarray(a["gain"]))
     return (jnp.asarray(a["counts"]), jnp.asarray(a["sizes"]), fs,
-            jnp.asarray(a["energy_weight"]), jnp.asarray(a["headroom"]),
-            jnp.asarray(a["levels"]))
+            jnp.asarray(a["energy_weight"]), params)
 
 
 def _event_args(d: ChunkDispatch) -> tuple:

@@ -50,10 +50,10 @@ import numpy as np
 from repro.core.metrics import Report, RunTotals, report
 from repro.core.workers import FleetParams
 from repro.ft.failures import fail_static
-from repro.sim.events_batched import (BLOCK, DISPATCH_CODES, EV_CHUNK_MAX,
-                                      _entries, _pad_pow2, _scalars)
-from repro.sim.ratesim import (Accum, FleetScalars, POLICIES,
-                               PREDICTOR_POLICIES, accum_to_totals,
+from repro.policies import get_dispatch_policy, get_rate_policy
+from repro.sim.events_batched import (BLOCK, EV_CHUNK_MAX, _entries,
+                                      _pad_pow2, _scalars)
+from repro.sim.ratesim import (Accum, FleetScalars, accum_to_totals,
                                static_level_for)
 
 # Cells per dispatch (rate plans). Every chunk is padded to one of
@@ -69,12 +69,11 @@ CHUNK_BIG = 256
 _N_MAX_CAP = 512
 
 # Policies whose *dynamics* are independent of the scheduling interval
-# and FPGA spin-up latency (cpu_dynamic never allocates FPGAs;
-# fpga_static provisions once, before the trace starts, and charges
-# spin-up through the traced `FleetScalars.A_f_s`). Their cells are
-# regrouped under one canonical static key so every spin-up value shares
-# a compiled program.
-_LATENCY_FREE = ("cpu_dynamic", "fpga_static")
+# and FPGA spin-up latency declare `latency_free = True` on their class
+# (cpu_dynamic never allocates FPGAs; fpga_static provisions once,
+# before the trace starts, and charges spin-up through the traced
+# `FleetScalars.A_f_s`). Their cells are regrouped under one canonical
+# static key so every spin-up value shares a compiled program.
 _CANON_INTERVAL = 10
 
 
@@ -204,14 +203,17 @@ def plan_sweep(cells: Iterable, n_max: int | None = None) -> SweepPlan:
         for c in resolve_scenarios(cells)]
     groups: dict[tuple, list[int]] = {}
     for i, c in enumerate(cells):
-        if c.policy not in POLICIES:
-            raise ValueError(f"unknown policy {c.policy!r}")
+        # the policy OBJECT (frozen dataclass: hashable, stable repr) is
+        # the group key and rides through `ChunkDispatch.static` — its
+        # static structure picks the compiled program, its traced
+        # parameters (headroom/level/gain) travel in the arrays
+        pol = get_rate_policy(c.policy)
         interval_s = max(int(round(c.fleet.T_s)), 1)
         spin_up_s = max(int(round(c.fleet.fpga.spin_up_s)), 1)
         horizon = (len(c.counts) // interval_s) * interval_s
-        if c.policy in _LATENCY_FREE and horizon % _CANON_INTERVAL == 0:
+        if pol.latency_free and horizon % _CANON_INTERVAL == 0:
             interval_s = spin_up_s = _CANON_INTERVAL
-        groups.setdefault((c.policy, interval_s, spin_up_s, horizon,
+        groups.setdefault((pol, interval_s, spin_up_s, horizon,
                            n_max or _N_MAX_CAP), []).append(i)
 
     n = len(cells)
@@ -219,16 +221,18 @@ def plan_sweep(cells: Iterable, n_max: int | None = None) -> SweepPlan:
     requests = np.zeros((n,), np.int64)
     dispatches: list[ChunkDispatch] = []
 
-    for (policy, interval_s, spin_up_s, horizon, nm), idxs in groups.items():
+    for (pol, interval_s, spin_up_s, horizon, nm), idxs in groups.items():
         group = [cells[i] for i in idxs]
         counts = np.stack([np.asarray(c.counts[:horizon], np.int32)
                            for c in group])
         sizes = np.array([c.size_s for c in group], np.float32)
         ew = np.array([c.energy_weight for c in group], np.float32)
         hr = np.array([c.headroom for c in group], np.int32)
+        gain = np.array([getattr(c, "forecast_gain", 1.0) for c in group],
+                        np.float32)
         scal = np.array([_fleet_scalars_np(c.fleet) for c in group],
                         np.float32)     # (C, len(FleetScalars._fields))
-        if policy == "fpga_static":
+        if pol.name == "fpga_static":
             levels = np.array(
                 [static_level_for(c.counts[:horizon], c.size_s, c.fleet, nm)
                  for c in group], np.int32)
@@ -241,10 +245,10 @@ def plan_sweep(cells: Iterable, n_max: int | None = None) -> SweepPlan:
         start = 0
         while start < len(group):
             left = len(group) - start
-            # Spork variants carry O(n_max^2) histogram state per cell, so
-            # they always use the small shape; cheap policies jump to the
-            # big shape for expanded grids (e.g. headroom tuning).
-            if policy in PREDICTOR_POLICIES or left <= CHUNK:
+            # Predictor policies carry O(n_max^2) histogram state per
+            # cell, so they always use the small shape; cheap policies
+            # jump to the big shape for expanded grids (headroom tuning).
+            if pol.uses_predictor or left <= CHUNK:
                 chunk = CHUNK
             else:
                 chunk = CHUNK_BIG
@@ -257,10 +261,11 @@ def plan_sweep(cells: Iterable, n_max: int | None = None) -> SweepPlan:
                 "energy_weight": _pad(ew[sl], chunk),
                 "headroom": _pad(hr[sl], chunk),
                 "levels": _pad(levels[sl], chunk),
+                "gain": _pad(gain[sl], chunk),
             }
             dispatches.append(ChunkDispatch(
                 kind="rate",
-                static=(policy, interval_s, spin_up_s, nm, horizon),
+                static=(pol, interval_s, spin_up_s, nm, horizon),
                 arrays=arrays, cell_idx=tuple(idxs[sl.start:sl.stop]),
                 chunk=chunk))
 
@@ -284,9 +289,9 @@ def plan_events(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
     streams x many chunks should slab their cell lists into multiple
     plans."""
     cells = resolve_scenarios(cells) if resolve else list(cells)
-    for cl in cells:
-        if cl.dispatcher not in DISPATCH_CODES:
-            raise ValueError(f"unknown dispatcher {cl.dispatcher!r}")
+    codes = {}
+    for i, cl in enumerate(cells):
+        codes[i] = get_dispatch_policy(cl.dispatcher).code
         if cl.arrival_times is None or cl.size_s is None:
             raise ValueError(
                 "EventCell without explicit demand (arrival_times + "
@@ -337,8 +342,7 @@ def plan_events(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
                                        for i in pad], np.int32),
                 "allocate": np.array([cells[i].allocate_fpgas
                                       for i in pad], bool),
-                "codes": np.array([DISPATCH_CODES[cells[i].dispatcher]
-                                   for i in pad], np.int32),
+                "codes": np.array([codes[i] for i in pad], np.int32),
                 "times": times, "tick_t": tick_t, "is_tick": is_tick,
             }
             dispatches.append(ChunkDispatch(

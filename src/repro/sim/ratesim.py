@@ -16,8 +16,15 @@ methodology, §3 and §5.1):
     misses its deadline when its queueing delay exceeds deadline - service
     time.
 
-Policies: 'spork' (E/C/B via objective weight), 'spork_ideal',
-'cpu_dynamic', 'fpga_static', 'fpga_dynamic', 'mark_ideal'.
+Policies are plugin objects (`repro.policies`): 'spork' (E/C/B via
+objective weight), 'spork_ideal', 'cpu_dynamic', 'fpga_static',
+'fpga_dynamic', 'mark_ideal', 'predictive'. Every entry point accepts a
+registered name or a `repro.policies.RatePolicy` instance; the policy
+object is a jit *static* argument (its frozen static structure picks
+the compiled program), while its tunable per-cell parameters ride in
+the traced `repro.policies.RateParams` pytree (headroom, static level,
+forecast gain), so parameter sweeps — and gradient tuning
+(`repro.policies.tune`) — reuse one program.
 
 Everything is jittable. Batched entry points (the sweep engine):
 
@@ -52,19 +59,22 @@ import numpy as np
 
 from repro.core.breakeven import ObjectiveCoeffs
 from repro.core.metrics import RunTotals
-from repro.core.predictor import (allocator_tick_jnp,
-                                  lifetime_update_from_rings)
 from repro.core.workers import FleetParams
+from repro.policies import (RateCtx, RateParams, get_rate_policy,
+                            rate_policies, rate_policy_names)
+from repro.policies.rate import needed_fpgas as _needed_fpgas
 
-POLICIES = ("spork", "spork_ideal", "cpu_dynamic", "fpga_static",
-            "fpga_dynamic", "mark_ideal")
+#: Registered rate-policy names (registration order). Kept as a module
+#: attribute for the benchmarks/tests that enumerate policies.
+POLICIES = rate_policy_names()
 
-# Only 'spork' consumes the per-level lifetime statistics (the Alg. 2
+# Policies that consume the per-level lifetime statistics (the Alg. 2
 # amortization term) and the conditional histogram — spork_ideal has
 # perfect information and mark_ideal never reads them. Every other policy
 # carries (1,)-shaped placeholders so large vmapped sweeps don't pay
 # O(n_max) per simulated second (or O(n_max^2) of histogram state).
-PREDICTOR_POLICIES = ("spork",)
+PREDICTOR_POLICIES = tuple(p.name for p in rate_policies()
+                           if p.uses_predictor)
 
 
 class FleetScalars(NamedTuple):
@@ -159,16 +169,20 @@ class SimState(NamedTuple):
     C_acc: jnp.ndarray            # CPU work (cpu-s) this interval
     cpu_prev: jnp.ndarray         # CPU workers used last second
     queue: jnp.ndarray            # queued work (FPGA-only policies)
+    lam_hist: jnp.ndarray         # previous interval's observed load
+                                  # (predictive forecast input)
     t: jnp.ndarray                # seconds elapsed
     accum: Accum
 
 
-def _second_step(policy: str, interval_s: int, spin_up_s: int, n_max: int,
-                 fs: FleetScalars, size_s, headroom, state: SimState,
+def _second_step(policy, ctx: RateCtx, params: RateParams, state: SimState,
                  arrivals) -> SimState:
-    """Advance one second: arrivals -> spin-up completions -> serving ->
-    reclaim -> accounting. `arrivals` is the request count this second."""
+    """Advance one second: arrivals -> spin-up completions -> serving
+    (`policy.dispatch_step` / `policy.cpu_keep`) -> reclaim
+    (`policy.reclaim`) -> shared accounting. `arrivals` is the request
+    count this second."""
     dt = jnp.float32(1.0)
+    fs, size_s = ctx.fs, ctx.size_s
     W = arrivals.astype(jnp.float32) * size_s           # CPU-seconds of demand
     acc = state.accum
 
@@ -177,66 +191,29 @@ def _second_step(policy: str, interval_s: int, spin_up_s: int, n_max: int,
     pending = jnp.concatenate([state.pending[1:], jnp.zeros((1,), jnp.int32)])
     up = state.up + completions
 
-    # --- serving ---
-    allow_cpu = policy in ("spork", "spork_ideal", "cpu_dynamic", "mark_ideal")
-    cap_f = up.astype(jnp.float32) * fs.S * dt
-    if policy == "mark_ideal":
-        # Round-robin split: each up worker receives an equal request share.
-        n_c_prev = state.cpu_prev.astype(jnp.float32)
-        n_tot = up.astype(jnp.float32) + n_c_prev
-        share_c = jnp.where(n_tot > 0, n_c_prev / jnp.maximum(n_tot, 1.0), 0.0)
-        cpu_work0 = jnp.minimum(W * share_c, n_c_prev * dt)
-        fpga_work = jnp.minimum(W - cpu_work0, cap_f)
-        residual = jnp.maximum(W - cpu_work0 - fpga_work, 0.0)
-        cpu_work = cpu_work0 + residual
-        queue = state.queue
-        missed = jnp.float32(0.0)
-    elif allow_cpu:
-        fpga_work = jnp.minimum(W, cap_f)
-        cpu_work = W - fpga_work
-        queue = state.queue
-        missed = jnp.float32(0.0)
-    else:
-        # FPGA-only: FIFO fluid queue; miss when delay exceeds slack.
-        backlog = state.queue + W
-        fpga_work = jnp.minimum(backlog, cap_f)
-        cpu_work = jnp.float32(0.0)
-        queue = backlog - fpga_work
-        slack = 10.0 * size_s - size_s / fs.S
-        delay = queue / jnp.maximum(cap_f, 1e-6)
-        missed = jnp.where(delay > slack, arrivals.astype(jnp.float32), 0.0)
+    # --- serving (policy dispatch rule) ---
+    fpga_work, cpu_work, queue, missed = policy.dispatch_step(
+        ctx, params, state, W, arrivals, up, dt)
 
     busy_f = fpga_work / fs.S                            # FPGA busy seconds
     used_f = jnp.ceil(busy_f / dt - 1e-6).astype(jnp.int32)
 
-    # --- CPU pool (dispatch-path allocation, 1 s idle timeout) ---
+    # --- CPU pool (dispatch-path allocation, policy linger rule) ---
     n_cpu = jnp.ceil(cpu_work / dt - 1e-6).astype(jnp.int32)
-    if policy == "mark_ideal":
-        # RR keeps every worker receiving requests alive.
-        keep = arrivals >= (up + state.cpu_prev)
-        cpu_alive = jnp.maximum(n_cpu, jnp.where(keep, state.cpu_prev, 0))
-    else:
-        cpu_alive = jnp.maximum(n_cpu, state.cpu_prev)   # 1 s linger
+    cpu_alive, cpu_prev_next = policy.cpu_keep(state, up, arrivals, n_cpu)
     new_cpus = jnp.maximum(n_cpu - state.cpu_prev, 0).astype(jnp.float32)
 
-    # --- idle reclaim (not for fpga_static) ---
-    used_ring = state.used_ring.at[state.t % interval_s].set(used_f)
-    young_ring = state.young_ring.at[state.t % interval_s].set(completions)
-    if policy == "fpga_static":
-        dealloc = jnp.int32(0)
-    else:
-        protected = jnp.maximum(jnp.max(used_ring), jnp.sum(young_ring))
-        if policy == "fpga_dynamic":
-            protected = jnp.maximum(protected,
-                                    used_f + headroom.astype(jnp.int32))
-        dealloc = jnp.maximum(up - protected, 0)
+    # --- idle reclaim (policy protection rule) ---
+    used_ring = state.used_ring.at[state.t % ctx.interval_s].set(used_f)
+    young_ring = state.young_ring.at[state.t % ctx.interval_s].set(completions)
+    dealloc = policy.reclaim(ctx, params, used_ring, young_ring, up, used_f)
     up_next = up - dealloc
     # Lifetime stats are NOT updated here: the per-second O(n_max)
     # alloc_time/life_sum bookkeeping was retired in favor of the
     # push/pop-count rings, replayed once per tick by
     # `predictor.lifetime_update_from_rings` (the stats are only read at
     # ticks, so deferring the update is exact).
-    dealloc_ring = state.dealloc_ring.at[state.t % interval_s].set(dealloc)
+    dealloc_ring = state.dealloc_ring.at[state.t % ctx.interval_s].set(dealloc)
 
     # --- accounting ---
     upf = up.astype(jnp.float32)
@@ -266,144 +243,32 @@ def _second_step(policy: str, interval_s: int, spin_up_s: int, n_max: int,
         alloc_time=state.alloc_time, H=state.H, life_sum=state.life_sum,
         life_cnt=state.life_cnt, n_lag=state.n_lag,
         F_acc=state.F_acc + busy_f, C_acc=state.C_acc + cpu_work,
-        cpu_prev=cpu_alive if policy == "mark_ideal" else n_cpu,
-        queue=queue, t=state.t + 1, accum=acc)
+        cpu_prev=cpu_prev_next, queue=queue, lam_hist=state.lam_hist,
+        t=state.t + 1, accum=acc)
 
 
-def _needed_fpgas(lam, interval_s, tb):
-    """Alg. 1 NeededFPGAs: floor + breakeven rounding. lam in FPGA-seconds."""
-    n = jnp.floor(lam / interval_s)
-    frac = lam - n * interval_s
-    return (n + (frac > tb)).astype(jnp.int32)
-
-
-def _interval_tick(policy: str, interval_s: int, spin_up_s: int, n_max: int,
-                   fs: FleetScalars, coeffs: ObjectiveCoeffs, tb,
-                   state: SimState, xs, headroom) -> SimState:
-    """Start-of-interval allocation decision (Alg. 1 for Spork)."""
-    next_true_needed, next_W, next2_W, static_level = xs
-    n_curr = state.up + jnp.sum(state.pending)
-
-    if policy in ("cpu_dynamic",):
-        return state._replace(F_acc=jnp.float32(0), C_acc=jnp.float32(0))
-
-    if policy == "fpga_dynamic":
-        # Reactive autoscaler at allocation-interval granularity (Table 4,
-        # "long-term"): minimum FPGAs for the load just observed + fixed
-        # headroom; spin-ups land one interval later. Downsizing via the
-        # standard idle timeout (headroom is protected in _second_step).
-        lam_prev = state.F_acc + state.C_acc / fs.S
-        needed_now = jnp.ceil(lam_prev / jnp.float32(interval_s)).astype(jnp.int32)
-        target = needed_now + headroom.astype(jnp.int32)
-        new = jnp.maximum(target - n_curr, 0)
-        new = jnp.maximum(jnp.minimum(new, n_max - 1 - n_curr), 0)
-        pending = state.pending.at[spin_up_s - 1].add(new)
-        acc = state.accum._replace(
-            fpga_spinups=state.accum.fpga_spinups + new.astype(jnp.float32))
-        return state._replace(pending=pending, accum=acc,
-                              F_acc=jnp.float32(0), C_acc=jnp.float32(0))
-
-    if policy == "fpga_static":
-        new = jnp.maximum(static_level - n_curr, 0)
-        # provisioned before the trace starts: arrives immediately (warm),
-        # spin-up energy/cost still charged below via accounting.
-        up = state.up + new
-        acc = state.accum
-        acc = acc._replace(
-            spin_j=acc.spin_j + new.astype(jnp.float32) * fs.B_f * fs.A_f_s,
-            cost=acc.cost + new.astype(jnp.float32) * fs.C_f * fs.A_f_s,
-            fpga_spinups=acc.fpga_spinups + new.astype(jnp.float32))
-        return state._replace(up=up, accum=acc,
-                              F_acc=jnp.float32(0), C_acc=jnp.float32(0))
-
-    if policy == "mark_ideal":
-        # Perfect demand knowledge two intervals ahead (§5.1): allocate for
-        # the next interval, downsize only what neither of the next two
-        # intervals needs (cost-breakeven rounding throughout). The
-        # predictive controller also releases surplus on-demand CPUs.
-        tb_cost = jnp.float32(interval_s) * fs.C_f / (fs.S * fs.C_c)
-        t1 = _needed_fpgas(next_W / fs.S, jnp.float32(interval_s), tb_cost)
-        t2 = _needed_fpgas(next2_W / fs.S, jnp.float32(interval_s), tb_cost)
-        target = jnp.minimum(t1, n_max - 1)
-        keep_floor = jnp.minimum(jnp.maximum(t1, t2), n_max - 1)
-        new = jnp.maximum(target - n_curr, 0)
-        drop = jnp.maximum(state.up - keep_floor, 0)
-        pending = state.pending.at[spin_up_s - 1].add(new)
-        cap_next = target.astype(jnp.float32) * fs.S * jnp.float32(interval_s)
-        cpu_needed = jnp.ceil(
-            jnp.maximum(next_W - cap_next, 0.0) / jnp.float32(interval_s)
-        ).astype(jnp.int32)
-        cpu_prev = jnp.minimum(state.cpu_prev, cpu_needed)
-        up_next = state.up - drop
-        # lifetime stats are a Spork-predictor input; mark_ideal never
-        # reads them, so skip the O(n_max) bookkeeping.
-        acc = state.accum
-        acc = acc._replace(
-            fpga_spinups=acc.fpga_spinups + new.astype(jnp.float32),
-            spin_j=acc.spin_j + drop.astype(jnp.float32) * fs.d_f,
-            cost=acc.cost + drop.astype(jnp.float32) * fs.C_f * fs.d_f_s)
-        return state._replace(pending=pending, up=up_next, accum=acc,
-                              cpu_prev=cpu_prev,
-                              F_acc=jnp.float32(0), C_acc=jnp.float32(0))
-
-    # --- Spork variants ---
-    if policy == "spork_ideal":
-        # Perfect information: the conditional histogram and lifetime
-        # stats are never consulted, so none of the predictor state is
-        # carried or updated (H/life are (1,)-shaped placeholders).
-        target = jnp.minimum(next_true_needed, n_max - 1)
-        H, n_lag = state.H, state.n_lag
-    else:
-        # Fold the previous interval's per-second push/pop counts into
-        # the per-level lifetime stats (the stats are only read here, so
-        # replaying the rings at the tick is exact and keeps the
-        # per-second scan free of O(n_max) bookkeeping).
-        alloc_time, life_sum, life_cnt = lifetime_update_from_rings(
-            state.alloc_time, state.life_sum, state.life_cnt,
-            state.young_ring, state.dealloc_ring, state.up, state.t)
-        state = state._replace(alloc_time=alloc_time, life_sum=life_sum,
-                               life_cnt=life_cnt)
-        lam = state.F_acc + state.C_acc / fs.S           # FPGA-seconds
-        # one shared Alg. 1+2 tick (NeededFPGAs rounding + histogram
-        # observe + lag shift + predict) — same entry point the batched
-        # DES uses, so the two engines cannot drift
-        H, n_lag, target = allocator_tick_jnp(
-            state.H, life_sum, life_cnt, state.n_lag, lam, n_curr,
-            coeffs, jnp.float32(interval_s), tb)
-
-    new = jnp.maximum(target - n_curr, 0)
-    new = jnp.minimum(new, n_max - 1 - n_curr)
-    pending = state.pending.at[spin_up_s - 1].add(new)
-    acc = state.accum._replace(
-        fpga_spinups=state.accum.fpga_spinups + new.astype(jnp.float32))
-    return state._replace(pending=pending, H=H, n_lag=n_lag, accum=acc,
-                          F_acc=jnp.float32(0), C_acc=jnp.float32(0))
-
-
-def _simulate_core(policy: str, interval_s: int, spin_up_s: int, n_max: int,
+def _simulate_core(policy, interval_s: int, spin_up_s: int, n_max: int,
                    horizon_s: int, counts: jnp.ndarray, size_s,
-                   fs: FleetScalars, energy_weight, headroom,
-                   static_level) -> Accum:
-    """Unjitted simulator core. Wrapped by `_simulate` (single trace) and
-    `_simulate_cells` (vmapped over every traced argument)."""
+                   fs: FleetScalars, energy_weight,
+                   params: RateParams) -> Accum:
+    """Unjitted simulator core. ``policy`` is a `repro.policies.
+    RatePolicy` (static); ``params`` the traced `RateParams` pytree.
+    Wrapped by `_simulate` (single trace) and `_simulate_cells` (vmapped
+    over every traced argument)."""
     k = horizon_s // interval_s
     counts = counts[:k * interval_s].reshape(k, interval_s).astype(jnp.int32)
     W_per_interval = jnp.sum(counts, axis=1).astype(jnp.float32) * size_s
     next_W = jnp.concatenate([W_per_interval[1:], jnp.zeros((1,))])
     next2_W = jnp.concatenate([W_per_interval[2:], jnp.zeros((2,))])
     coeffs, tb = coeffs_in_graph(fs, interval_s, fs.A_f_s, energy_weight)
+    ctx = RateCtx(interval_s=interval_s, spin_up_s=spin_up_s, n_max=n_max,
+                  fs=fs, size_s=size_s, coeffs=coeffs, tb=tb)
     # true needed counts for the *next* interval (ideal variants)
     next_true = _needed_fpgas(next_W / fs.S, jnp.float32(interval_s), tb)
 
-    # fpga_dynamic starts warm (pre-warmed reactive autoscaler): initial
-    # capacity for the first second's demand + headroom, spin-up charged.
-    init_up = jnp.int32(0)
-    init_spin = jnp.float32(0.0)
-    if policy == "fpga_dynamic":
-        w0 = counts[0, 0].astype(jnp.float32) * size_s
-        init_up = (jnp.ceil(w0 / fs.S).astype(jnp.int32)
-                   + headroom.astype(jnp.int32))
-        init_spin = init_up.astype(jnp.float32)
+    # Policy warm start (e.g. the pre-warmed reactive autoscaler):
+    # initial capacity, spin-up energy/cost charged here.
+    init_up, init_spin = policy.init_alloc(ctx, params, counts)
     acc0 = Accum.zero()._replace(
         spin_j=init_spin * fs.B_f * fs.A_f_s,
         cost=init_spin * fs.C_f * fs.A_f_s,
@@ -411,7 +276,7 @@ def _simulate_core(policy: str, interval_s: int, spin_up_s: int, n_max: int,
 
     # Lifetime/histogram state only exists for the Spork variants (the
     # only consumers); placeholders keep the pytree structure stable.
-    n_life = n_max if policy in PREDICTOR_POLICIES else 1
+    n_life = n_max if policy.uses_predictor else 1
     state = SimState(
         up=init_up, pending=jnp.zeros((max(spin_up_s, 1) + 1,), jnp.int32),
         used_ring=jnp.zeros((interval_s,), jnp.int32),
@@ -423,16 +288,14 @@ def _simulate_core(policy: str, interval_s: int, spin_up_s: int, n_max: int,
         life_cnt=jnp.zeros((n_life,), jnp.float32),
         n_lag=jnp.zeros((2,), jnp.int32), F_acc=jnp.float32(0),
         C_acc=jnp.float32(0), cpu_prev=jnp.int32(0), queue=jnp.float32(0),
-        t=jnp.int32(0), accum=acc0)
+        lam_hist=jnp.float32(0), t=jnp.int32(0), accum=acc0)
 
     def interval_body(st, xs):
         nt, nw, nw2, cnts = xs
-        st = _interval_tick(policy, interval_s, spin_up_s, n_max, fs, coeffs,
-                            tb, st, (nt, nw, nw2, static_level), headroom)
+        st = policy.allocator_tick(ctx, params, st, (nt, nw, nw2))
 
         def sec_body(s, a):
-            return _second_step(policy, interval_s, spin_up_s, n_max, fs,
-                                size_s, headroom, s, a), None
+            return _second_step(policy, ctx, params, s, a), None
 
         # The O(n_max^2) histogram and the O(n_max) lifetime arrays are
         # only touched at interval ticks; keep them out of the per-second
@@ -461,22 +324,21 @@ _simulate = functools.partial(jax.jit, static_argnames=_STATIC_ARGS)(
     _simulate_core)
 
 
-def _simulate_cells_core(policy: str, interval_s: int, spin_up_s: int,
+def _simulate_cells_core(policy, interval_s: int, spin_up_s: int,
                          n_max: int, horizon_s: int, counts: jnp.ndarray,
-                         size_s, fs: FleetScalars, energy_weight, headroom,
-                         static_level) -> Accum:
+                         size_s, fs: FleetScalars, energy_weight,
+                         params: RateParams) -> Accum:
     """Batched core (unjitted): every traced argument carries a leading
     cell axis (counts ``(C, T)``, everything else ``(C,)``,
-    `FleetScalars` leaves ``(C,)``). Exposed unjitted so
+    `FleetScalars` / `RateParams` leaves ``(C,)``). Exposed unjitted so
     `repro.sim.exec.MeshBackend` can `shard_map` it over the cell axis;
     `_simulate_cells` is its jitted single-device twin."""
 
-    def one(c, sz, f, ew, hr, sl):
+    def one(c, sz, f, ew, pr):
         return _simulate_core(policy, interval_s, spin_up_s, n_max,
-                              horizon_s, c, sz, f, ew, hr, sl)
+                              horizon_s, c, sz, f, ew, pr)
 
-    return jax.vmap(one)(counts, size_s, fs, energy_weight, headroom,
-                         static_level)
+    return jax.vmap(one)(counts, size_s, fs, energy_weight, params)
 
 
 #: Jitted batched core: one dispatch simulates the whole cell batch.
@@ -504,31 +366,33 @@ def static_level_for(counts: np.ndarray, size_s: float, fleet: FleetParams,
     return min(int(np.ceil(peak)), n_max - 1)
 
 
-def simulate(policy: str, counts: np.ndarray, size_s: float,
+def simulate(policy, counts: np.ndarray, size_s: float,
              fleet: FleetParams, energy_weight: float = 1.0,
-             headroom: int = 0, n_max: int = 512) -> RunTotals:
-    """Run one policy on one trace; returns paper-style totals."""
-    if policy not in POLICIES:
-        raise ValueError(f"unknown policy {policy!r}")
+             headroom: int = 0, n_max: int = 512,
+             forecast_gain: float = 1.0) -> RunTotals:
+    """Run one policy (registered name or `RatePolicy` object) on one
+    trace; returns paper-style totals."""
+    policy = get_rate_policy(policy)
     interval_s = max(int(round(fleet.T_s)), 1)
     spin_up_s = max(int(round(fleet.fpga.spin_up_s)), 1)
     horizon = (len(counts) // interval_s) * interval_s
     counts = np.asarray(counts[:horizon])
     fs = FleetScalars.from_fleet(fleet)
-    static_level = jnp.int32(0)
-    if policy == "fpga_static":
-        static_level = jnp.int32(static_level_for(counts, size_s, fleet, n_max))
+    static_level = 0
+    if policy.name == "fpga_static":
+        static_level = static_level_for(counts, size_s, fleet, n_max)
+    params = RateParams.make(headroom, static_level, forecast_gain)
     acc = _simulate(policy, interval_s, spin_up_s, n_max, horizon,
                     jnp.asarray(counts), jnp.float32(size_s), fs,
-                    jnp.float32(energy_weight), jnp.int32(headroom),
-                    static_level)
+                    jnp.float32(energy_weight), params)
     total_work = float(np.sum(counts) * size_s)
     return accum_to_totals(acc, total_work, int(np.sum(counts)))
 
 
-def simulate_batch(policy: str, counts_batch: np.ndarray, size_s: float,
+def simulate_batch(policy, counts_batch: np.ndarray, size_s: float,
                    fleet: FleetParams, energy_weight: float = 1.0,
-                   headroom: int = 0, n_max: int = 512) -> Accum:
+                   headroom: int = 0, n_max: int = 512,
+                   forecast_gain: float = 1.0) -> Accum:
     """Run one policy on a batch of traces in ONE jitted dispatch.
 
     ``counts_batch`` is ``(B, T)`` per-second arrival counts (equal
@@ -536,8 +400,7 @@ def simulate_batch(policy: str, counts_batch: np.ndarray, size_s: float,
     `Accum` with ``(B,)`` leaves; convert with `batch_totals`. Per-trace
     totals match per-call `simulate` to float32 tolerance.
     """
-    if policy not in POLICIES:
-        raise ValueError(f"unknown policy {policy!r}")
+    policy = get_rate_policy(policy)
     counts_batch = np.asarray(counts_batch)
     if counts_batch.ndim != 2:
         raise ValueError(f"counts_batch must be (B, T), got {counts_batch.shape}")
@@ -548,16 +411,18 @@ def simulate_batch(policy: str, counts_batch: np.ndarray, size_s: float,
     counts_batch = counts_batch[:, :horizon]
     fs = FleetScalars.from_fleet(fleet)
     fs_b = FleetScalars(*[jnp.full((B,), leaf, jnp.float32) for leaf in fs])
-    if policy == "fpga_static":
+    if policy.name == "fpga_static":
         levels = np.array([static_level_for(c, size_s, fleet, n_max)
                            for c in counts_batch], np.int32)
     else:
         levels = np.zeros((B,), np.int32)
+    params = RateParams(jnp.full((B,), headroom, jnp.int32),
+                        jnp.asarray(levels),
+                        jnp.full((B,), forecast_gain, jnp.float32))
     return _simulate_cells(
         policy, interval_s, spin_up_s, n_max, horizon,
         jnp.asarray(counts_batch), jnp.full((B,), size_s, jnp.float32), fs_b,
-        jnp.full((B,), energy_weight, jnp.float32),
-        jnp.full((B,), headroom, jnp.int32), jnp.asarray(levels))
+        jnp.full((B,), energy_weight, jnp.float32), params)
 
 
 def batch_totals(acc: Accum, counts_batch: np.ndarray,
@@ -604,13 +469,14 @@ def tune_fpga_dynamic(counts: np.ndarray, size_s: float, fleet: FleetParams,
     K = max_k + 1
     fs = FleetScalars.from_fleet(fleet)
     fs_b = FleetScalars(*[jnp.full((K,), leaf, jnp.float32) for leaf in fs])
+    params = RateParams(jnp.arange(K, dtype=jnp.int32) * unit,
+                        jnp.zeros((K,), jnp.int32),
+                        jnp.ones((K,), jnp.float32))
     acc = _simulate_cells(
-        "fpga_dynamic", interval_s, spin_up_s, n_max, horizon,
-        jnp.broadcast_to(jnp.asarray(counts), (K, horizon)),
+        get_rate_policy("fpga_dynamic"), interval_s, spin_up_s, n_max,
+        horizon, jnp.broadcast_to(jnp.asarray(counts), (K, horizon)),
         jnp.full((K,), size_s, jnp.float32), fs_b,
-        jnp.ones((K,), jnp.float32),
-        jnp.arange(K, dtype=jnp.int32) * unit,
-        jnp.zeros((K,), jnp.int32))
+        jnp.ones((K,), jnp.float32), params)
     misses = np.asarray(acc.missed_requests)
     zero = np.nonzero(misses == 0)[0]
     k = int(zero[0]) if len(zero) else max_k

@@ -70,7 +70,9 @@ class SweepCell:
     size_s: float | None = None        # request service time on a CPU worker
     fleet: FleetParams = DEFAULT_FLEET
     energy_weight: float = 1.0
-    headroom: int = 0             # fpga_dynamic only
+    headroom: int = 0             # fpga_dynamic family only
+    forecast_gain: float = 1.0    # predictive only: trend-extrapolation
+                                  # gain (RateParams.gain)
     tag: Any = None               # caller's join key; carried through
     scenario: Any = None          # repro.workloads.ScenarioSpec | None
     seed: int = 0                 # scenario realization seed
@@ -104,6 +106,10 @@ class SweepCell:
         if self.headroom < 0:
             raise ValueError(
                 f"SweepCell.headroom must be >= 0, got {self.headroom!r}")
+        if not np.isfinite(self.forecast_gain):
+            raise ValueError(
+                f"SweepCell.forecast_gain must be finite, got "
+                f"{self.forecast_gain!r}")
         if np.ndim(self.seed) != 0:
             raise ValueError(
                 f"SweepCell.seed must be a scalar (one seed per cell — "

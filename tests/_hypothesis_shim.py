@@ -8,7 +8,8 @@ default 10) with values drawn from seeded `numpy` generators — the seed
 derives from the test name and example index, so runs are reproducible.
 No shrinking, no example database; failures report the drawn arguments.
 
-Supported strategies: floats, integers, sampled_from, lists, data.
+Supported strategies: floats, integers, booleans, just, sampled_from,
+lists, tuples, builds, data.
 """
 
 from __future__ import annotations
@@ -54,6 +55,27 @@ def _lists(elements, min_size=0, max_size=None):
     return _Strategy(draw, f"lists(min={min_size}, max={max_size})")
 
 
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)), "booleans")
+
+
+def _just(value):
+    return _Strategy(lambda rng: value, f"just({value!r})")
+
+
+def _tuples(*strats):
+    return _Strategy(lambda rng: tuple(s._draw(rng) for s in strats),
+                     f"tuples[{len(strats)}]")
+
+
+def _builds(target, *arg_strats, **kw_strats):
+    def draw(rng):
+        args = [s._draw(rng) for s in arg_strats]
+        kwargs = {k: s._draw(rng) for k, s in kw_strats.items()}
+        return target(*args, **kwargs)
+    return _Strategy(draw, f"builds({getattr(target, '__name__', target)})")
+
+
 class _DataObject:
     """Interactive draws, mirroring `st.data()`'s DataObject."""
 
@@ -68,7 +90,8 @@ _DATA_SENTINEL = _Strategy(None, "data()")
 
 strategies = types.SimpleNamespace(
     floats=_floats, integers=_integers, sampled_from=_sampled_from,
-    lists=_lists, data=lambda: _DATA_SENTINEL)
+    lists=_lists, booleans=_booleans, just=_just, tuples=_tuples,
+    builds=_builds, data=lambda: _DATA_SENTINEL)
 
 
 def settings(max_examples: int = 10, deadline=None, **_kw):

@@ -1,0 +1,145 @@
+"""Shared hypothesis strategies for the repro test-suite.
+
+One module owns the random generators for the domain objects every
+property test keeps re-inventing — `SweepCell`, `EventCell`,
+`ScenarioSpec`, `FleetParams`, `FailureSpec` — so their domains
+(positive sizes, finite weights, dyadic failure knobs, registered
+policy names) are encoded once and drift-proof. Works under both real
+`hypothesis` and the deterministic `tests/_hypothesis_shim.py` the
+container falls back to.
+
+Strategies draw *valid* objects by construction: anything a strategy
+here produces must be accepted by the planners (`plan_sweep` /
+`plan_events`) — that contract is itself what several property tests
+assert.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    from hypothesis import strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_shim import strategies as st
+
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET, FleetParams
+from repro.ft.failures import FailureSpec
+from repro.sim.events import DISPATCHERS
+from repro.sim.ratesim import POLICIES
+from repro.sim.sweep import EventCell, SweepCell
+from repro.workloads import registry
+
+__all__ = [
+    "rate_policy_names", "dispatcher_names", "fleets", "failure_specs",
+    "disabled_failure_specs", "scenario_specs", "trace_counts",
+    "arrival_streams", "sweep_cells", "event_cells",
+]
+
+
+# ----------------------------------------------------------- scalar pools
+
+rate_policy_names = st.sampled_from(POLICIES)
+dispatcher_names = st.sampled_from(DISPATCHERS)
+
+
+def fleets(spin_ups=(1.0, 10.0, 60.0)) -> "st.SearchStrategy":
+    """DEFAULT_FLEET with a drawn FPGA spin-up latency (the static axis
+    sweeps group on) and CPU spin-up in {1 s quantized, default}."""
+    def build(spin, quantized_cpu):
+        f = DEFAULT_FLEET.replace(
+            fpga=DEFAULT_FLEET.fpga.replace(spin_up_s=spin))
+        if quantized_cpu:
+            f = f.replace(cpu=f.cpu.replace(spin_up_s=1.0))
+        return f
+    return st.builds(build, st.sampled_from(list(spin_ups)), st.booleans())
+
+
+def failure_specs() -> "st.SearchStrategy":
+    """Enabled fault models with dyadic timing knobs (backoff, straggler
+    factor), matching the engines' float32-exactness contract."""
+    return st.builds(
+        FailureSpec,
+        spinup_fail_p=st.sampled_from([0.0, 0.125, 0.25]),
+        max_retries=st.integers(min_value=1, max_value=2),
+        retry_backoff_s=st.just(2.0),
+        crash_p=st.sampled_from([0.0, 0.03125, 0.0625]),
+        max_failover=st.integers(min_value=1, max_value=2),
+        straggler_frac=st.sampled_from([0.0, 0.125, 0.25]),
+        straggler_factor=st.sampled_from([2.0, 4.0]),
+        seed=st.integers(min_value=0, max_value=2**16))
+
+
+def disabled_failure_specs() -> "st.SearchStrategy":
+    """Specs whose every rate is zero: must normalize away and share the
+    failure-axis-off program group with ``failures=None``."""
+    return st.builds(
+        lambda base, seed: base.scaled(0.0) if base is not None
+        else FailureSpec(seed=seed),
+        st.sampled_from([None,
+                         FailureSpec(crash_p=0.0625, seed=1),
+                         FailureSpec(spinup_fail_p=0.25, max_retries=2,
+                                     retry_backoff_s=2.0, seed=2)]),
+        st.integers(min_value=0, max_value=99))
+
+
+def scenario_specs(horizon_s: int = 120) -> "st.SearchStrategy":
+    """Registered workload scenarios, shrunk to a test-sized horizon and
+    demand so planner tests stay host-side-cheap."""
+    names = [n for n in registry.names() if n != "csv_replay"]
+    return st.builds(
+        lambda name, demand: registry.get(name).with_(
+            horizon_s=horizon_s, mean_demand_workers=demand),
+        st.sampled_from(names),
+        st.sampled_from([5.0, 20.0]))
+
+
+# ------------------------------------------------------------- demand pools
+
+def trace_counts(horizon_s: int = 600) -> "st.SearchStrategy":
+    """Per-second arrival-count traces from the paper's synthetic
+    generator (drawn seed x burstiness bias)."""
+    return st.builds(
+        lambda seed, bias: synthetic_trace(
+            seed=seed, bias=bias, horizon_s=horizon_s,
+            request_size_s=0.05, mean_demand_workers=20.0).counts,
+        st.integers(min_value=0, max_value=7),
+        st.sampled_from([0.55, 0.65, 0.75]))
+
+
+def arrival_streams(horizon_s: float = 60.0) -> "st.SearchStrategy":
+    """Integer-quantized arrival-time streams (the DES engines'
+    exactness contract quantizes arrivals)."""
+    def build(seed, n):
+        rng = np.random.default_rng(seed)
+        return np.sort(rng.integers(0, int(horizon_s) * 8, n)) / 8.0
+    return st.builds(build, st.integers(min_value=0, max_value=2**16),
+                     st.integers(min_value=20, max_value=80))
+
+
+# -------------------------------------------------------------- cell pools
+
+def sweep_cells(horizon_s: int = 600, policies=None) -> "st.SearchStrategy":
+    """Valid rate-sweep cells over every registered policy: drawn trace,
+    fleet, objective weight, headroom and forecast gain."""
+    pol = (st.sampled_from(list(policies)) if policies is not None
+           else rate_policy_names)
+    return st.builds(
+        lambda policy, counts, fleet, ew, hr, gain: SweepCell(
+            policy, counts, 0.05, fleet, energy_weight=ew, headroom=hr,
+            forecast_gain=gain),
+        pol, trace_counts(horizon_s), fleets(),
+        st.sampled_from([0.5, 1.0]), st.integers(min_value=0, max_value=4),
+        st.sampled_from([0.5, 1.0, 1.5]))
+
+
+def event_cells(horizon_s: float = 60.0, with_failures: bool = False,
+                ) -> "st.SearchStrategy":
+    """Valid DES cells over every registered dispatcher; optionally
+    carrying a drawn (enabled) fault model."""
+    fail = (failure_specs() if with_failures else st.just(None))
+    return st.builds(
+        lambda disp, arr, fleet, f: EventCell(
+            disp, arr, 1.0, fleet, horizon_s=horizon_s, failures=f),
+        dispatcher_names, arrival_streams(horizon_s), fleets(), fail)

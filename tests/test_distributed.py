@@ -176,13 +176,25 @@ def test_spmd_train_step_runs_on_8_devices():
     assert "SPMD_OK" in _run_multidev(body)
 
 
+_DRYRUN_DIR = "results/dryrun"
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(_DRYRUN_DIR),
+    reason="results/dryrun/ not committed: collecting it means "
+    "`python -m repro.launch.dryrun --all --mesh both --out "
+    "results/dryrun`, which fabricates 512 XLA host devices and "
+    "AOT-compiles every (arch x shape) registry cell on both production "
+    "meshes — minutes of compile for evidence that only changes when "
+    "configs/ or distributed/sharding change. Collect + commit the "
+    "records after touching those layers; until then this guard has "
+    "nothing to check. Tracking note: docs/EXPERIMENTS.md "
+    "'Dry-run compile records'.")
 def test_dryrun_records_exist_and_pass():
     """The committed dry-run results must show every cell compiling on
     both production meshes (the actual compile runs are the dry-run CLI;
     this guards the recorded evidence)."""
-    d = "results/dryrun"
-    if not os.path.isdir(d):
-        pytest.skip("dry-run results not collected yet")
+    d = _DRYRUN_DIR
     from repro.configs.registry import cells
     missing, failed = [], []
     for arch, shape, _ in cells():

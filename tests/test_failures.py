@@ -20,6 +20,12 @@ import pytest
 
 import jax.numpy as jnp
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+import strategies as shared
 from repro.core.workers import DEFAULT_FLEET
 from repro.ft.failures import (DRAW_CRASH, DRAW_SPINUP, FSTAT_OFF,
                                FailureSpec, failure_u01)
@@ -163,24 +169,40 @@ def test_failover_exhaustion_under_tight_deadline(disp):
 
 # ----------------------------------------------------- planning contracts
 
-def test_plan_groups_disabled_specs_with_none():
-    """failures=None, FailureSpec() and scaled(0.0) cells must share one
-    FSTAT_OFF program group — no recompile for a disabled axis."""
+@settings(max_examples=8, deadline=None)
+@given(disabled=shared.disabled_failure_specs(),
+       disp=shared.dispatcher_names)
+def test_plan_groups_disabled_specs_with_none(disabled, disp):
+    """failures=None and ANY disabled spec (all-zero FailureSpec, any
+    enabled spec scaled to 0.0 — drawn from tests/strategies.py) must
+    share one FSTAT_OFF program group — no recompile for a disabled
+    axis."""
     arr = bursty_trace(3)
-    base = [EventCell("spork", arr, 1.0, QFLEET, horizon_s=HORIZON)]
+    base = [EventCell(disp, arr, 1.0, QFLEET, horizon_s=HORIZON)]
     mixed = base + [
-        EventCell("spork", arr, 1.0, QFLEET, horizon_s=HORIZON,
-                  failures=FailureSpec()),
-        EventCell("spork", arr, 1.0, QFLEET, horizon_s=HORIZON,
-                  failures=FSPECS["crashy"].scaled(0.0))]
+        EventCell(disp, arr, 1.0, QFLEET, horizon_s=HORIZON,
+                  failures=disabled)]
     p0 = plan_events(base, n_max=64, w_fpga=16, w_cpu=32)
     p1 = plan_events(mixed, n_max=64, w_fpga=16, w_cpu=32)
     assert p1.n_dispatches == p0.n_dispatches == 1
     assert all(d.static[-1] == FSTAT_OFF for d in p1.dispatches)
     p2 = plan_events(mixed + [EventCell(
-        "spork", arr, 1.0, QFLEET, horizon_s=HORIZON,
+        disp, arr, 1.0, QFLEET, horizon_s=HORIZON,
         failures=FSPECS["crashy"])], n_max=64, w_fpga=16, w_cpu=32)
     assert p2.n_dispatches == 2      # the enabled cell gets its own group
+
+
+@settings(max_examples=8, deadline=None)
+@given(fs=shared.failure_specs())
+def test_drawn_spec_normalization_consistent(fs):
+    """`normalized()` is the single switch: a spec normalizing to None
+    must plan into the FSTAT_OFF group; one that survives must not."""
+    arr = bursty_trace(4)
+    cell = EventCell("spork", arr, 1.0, QFLEET, horizon_s=HORIZON,
+                     failures=fs)
+    plan = plan_events([cell], n_max=64, w_fpga=16, w_cpu=32)
+    is_off = plan.dispatches[0].static[-1] == FSTAT_OFF
+    assert is_off == (fs.normalized() is None)
 
 
 def test_scenario_failure_inheritance():

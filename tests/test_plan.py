@@ -23,6 +23,12 @@ import textwrap
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+import strategies as shared
 from repro.core.traces import synthetic_trace
 from repro.core.workers import DEFAULT_FLEET
 from repro.sim.events_batched import EV_CHUNK_MAX
@@ -55,26 +61,28 @@ def _event_cells(n=3):
 
 
 # ------------------------------------------------------------ plan invariants
-def test_rate_plan_scatter_is_permutation():
-    cells = _rate_cells()
+# Property style over the shared strategy pools (tests/strategies.py):
+# anything the strategies draw — any registered policy/dispatcher, any
+# fleet, any headroom/gain — must plan to a valid, covering dispatch
+# list. Planning is host-side, so examples stay cheap.
+
+@settings(max_examples=5, deadline=None)
+@given(cells=st.lists(shared.sweep_cells(), min_size=1, max_size=6))
+def test_rate_plan_scatter_is_permutation(cells):
     plan = plan_sweep(cells)
     idx = [i for d in plan.dispatches for i in d.cell_idx]
     assert sorted(idx) == list(range(len(cells)))
 
 
-def test_event_plan_scatter_is_permutation():
-    cells = _event_cells()
+@settings(max_examples=5, deadline=None)
+@given(cells=st.lists(shared.event_cells(), min_size=1, max_size=6))
+def test_event_plan_scatter_is_permutation(cells):
     plan = plan_events(cells, n_max=64, w_fpga=16, w_cpu=32)
     idx = [i for d in plan.dispatches for i in d.cell_idx]
     assert sorted(idx) == list(range(len(cells)))
 
 
-@pytest.mark.parametrize("make_plan", [
-    lambda: plan_sweep(_rate_cells()),
-    lambda: plan_events(_event_cells(), n_max=64, w_fpga=16, w_cpu=32),
-], ids=["rate", "event"])
-def test_plan_pads_only_repeat_row0(make_plan):
-    plan = make_plan()
+def _assert_pads_repeat_row0(plan):
     for d in plan.dispatches:
         assert d.n_real <= d.chunk
         for name, arr in d.arrays.items():
@@ -82,6 +90,23 @@ def test_plan_pads_only_repeat_row0(make_plan):
             for r in range(d.n_real, d.chunk):
                 np.testing.assert_array_equal(arr[r], arr[0],
                                               err_msg=f"{name} row {r}")
+
+
+@settings(max_examples=4, deadline=None)
+@given(data=st.data())
+def test_rate_plan_pads_only_repeat_row0(data):
+    cells = data.draw(st.lists(shared.sweep_cells(), min_size=1,
+                               max_size=6))
+    _assert_pads_repeat_row0(plan_sweep(cells))
+
+
+@settings(max_examples=4, deadline=None)
+@given(data=st.data())
+def test_event_plan_pads_only_repeat_row0(data):
+    cells = data.draw(st.lists(shared.event_cells(), min_size=1,
+                               max_size=6))
+    _assert_pads_repeat_row0(plan_events(cells, n_max=64, w_fpga=16,
+                                         w_cpu=32))
 
 
 def test_rate_plan_chunk_vocabulary():

@@ -1,0 +1,354 @@
+"""Cross-engine policy-equivalence lockdown (the plugin-layer contract).
+
+tests/goldens/policy_goldens.json pins the exact `RunTotals` the
+PRE-refactor string-dispatch engines produced (generated at commit
+fa2a726 by tools/gen_policy_goldens.py; the ``rate_plugin`` section
+pins the policies introduced WITH the plugin layer at introduction).
+This suite asserts the policy-as-plugin layer (`repro.policies`)
+reproduces them
+
+  * per engine: `ratesim.simulate`, the serial `events.EventSim`
+    oracle, and `events_batched` — counters bit-identical, energies to
+    ~1e-5 relative;
+  * per backend: the plan/execute path (`sweep` / `sweep_events`) on
+    `LocalBackend`, and on a forced-2-device `MeshBackend` in a
+    subprocess (CI's policy-matrix job re-runs the whole suite under
+    ``BENCH_SWEEP_BACKEND=mesh`` + 2 fabricated devices);
+
+plus the registry/plugin contracts themselves: resolution, duplicate
+rejection, unique traced dispatch codes, policy objects as plan group
+keys, and a user-registered policy flowing through every engine with
+no engine edits.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import RunTotals
+from repro.core.traces import synthetic_trace
+from repro.core.workers import DEFAULT_FLEET
+from repro.ft.failures import FailureSpec
+from repro.policies import (Candidates, DispatchPolicy, RateParams,
+                            RatePolicy, dispatch_policies,
+                            dispatch_policy_names, get_dispatch_policy,
+                            get_rate_policy, rate_policies,
+                            rate_policy_names, register_dispatch,
+                            register_rate)
+from repro.policies.base import DISPATCH_REGISTRY, RATE_REGISTRY
+from repro.sim import ratesim
+from repro.sim.events import simulate_events
+from repro.sim.events_batched import simulate_events_batched
+from repro.sim.plan import plan_sweep
+from repro.sim.sweep import EventCell, SweepCell, sweep, sweep_events
+
+GOLDENS = json.loads(
+    (Path(__file__).parent / "goldens" / "policy_goldens.json").read_text())
+
+# instance parameters — must mirror tools/gen_policy_goldens.py
+QFLEET = DEFAULT_FLEET.replace(cpu=DEFAULT_FLEET.cpu.replace(spin_up_s=1.0))
+HORIZON = 180
+N_MAX = 64
+FSPEC = FailureSpec(spinup_fail_p=0.125, max_retries=1, retry_backoff_s=2.0,
+                    crash_p=0.0625, max_failover=2, straggler_frac=0.125,
+                    straggler_factor=2.0, evac_frac=0.25, evac_start_s=80.0,
+                    evac_end_s=140.0, seed=11)
+
+COUNTERS = ("requests", "deadline_misses", "fpga_spinups", "cpu_spinups",
+            "retries", "failed_spinups", "crashes", "recovered_requests",
+            "failure_misses")
+ENERGIES = ("energy_j", "cost_usd", "work_on_fpga_cpu_s",
+            "work_on_cpu_cpu_s", "fpga_idle_j", "fpga_busy_j", "cpu_busy_j",
+            "spinup_j", "wasted_spinup_j")
+
+
+def rate_trace():
+    return synthetic_trace(seed=3, bias=0.65, horizon_s=600,
+                           request_size_s=0.05, mean_demand_workers=10.0)
+
+
+def event_arrivals():
+    rng = np.random.default_rng(0)
+    rates = np.where((np.arange(HORIZON) // 20) % 2 == 0, 8.0, 0.5)
+    return np.repeat(np.arange(HORIZON, dtype=np.float64),
+                     rng.poisson(rates))
+
+
+def assert_matches_golden(tot: RunTotals, row: dict, tag):
+    for f in COUNTERS:
+        assert getattr(tot, f) == row[f], (tag, f, getattr(tot, f), row[f])
+    for f in ENERGIES:
+        np.testing.assert_allclose(getattr(tot, f), row[f], rtol=1e-5,
+                                   atol=1e-3, err_msg=f"{tag} {f}")
+
+
+def _rate_kwargs(key: str) -> dict:
+    """Decode a golden key ('fpga_dynamic@h2', 'predictive@h2_g0.5',
+    'spork@w0.5') into simulate()/SweepCell kwargs."""
+    policy, _, mods = key.partition("@")
+    kw = dict(policy=policy)
+    for mod in mods.split("_") if mods else ():
+        if mod.startswith("h"):
+            kw["headroom"] = int(mod[1:])
+        elif mod.startswith("w"):
+            kw["energy_weight"] = float(mod[1:])
+        elif mod.startswith("g"):
+            kw["forecast_gain"] = float(mod[1:])
+    return kw
+
+
+RATE_KEYS = sorted(GOLDENS["rate"]) + sorted(GOLDENS["rate_plugin"])
+
+
+def _rate_golden(key: str) -> dict:
+    return (GOLDENS["rate"].get(key) or GOLDENS["rate_plugin"][key])
+
+
+# ------------------------------------------------------- ratesim vs goldens
+
+@pytest.mark.parametrize("key", RATE_KEYS)
+def test_rate_policy_matches_pre_refactor_golden(key):
+    tr = rate_trace()
+    tot = ratesim.simulate(counts=tr.counts, size_s=tr.request_size_s,
+                           fleet=DEFAULT_FLEET, n_max=N_MAX,
+                           **_rate_kwargs(key))
+    assert_matches_golden(tot, _rate_golden(key), ("ratesim", key))
+
+
+def test_rate_goldens_cover_every_registered_policy():
+    """A policy added to the registry without a pinned golden fails
+    here — the lockdown must grow with the registry."""
+    pinned = {k.partition("@")[0] for k in RATE_KEYS}
+    assert pinned == set(rate_policy_names())
+
+
+def test_sweep_local_backend_matches_goldens():
+    """The plan/execute path (policy OBJECTS in chunk statics, params
+    in `RateParams` arrays) reproduces every pinned rate golden.
+    ``backend=None`` resolves via BENCH_SWEEP_BACKEND, so CI's
+    policy-matrix job re-runs this same assertion on the mesh backend."""
+    tr = rate_trace()
+    cells = [SweepCell(counts=tr.counts, size_s=tr.request_size_s,
+                       fleet=DEFAULT_FLEET, **_rate_kwargs(k))
+             for k in RATE_KEYS]
+    res = sweep(cells, n_max=N_MAX, backend=None)
+    for i, key in enumerate(RATE_KEYS):
+        assert_matches_golden(res.totals(i), _rate_golden(key),
+                              ("sweep", res.backend, key))
+
+
+# ---------------------------------------------------- DES engines vs goldens
+
+EVENT_KEYS = sorted(GOLDENS["event"])
+
+
+@pytest.mark.parametrize("key", EVENT_KEYS)
+def test_event_policies_match_pre_refactor_goldens(key):
+    disp, _, fail_key = key.partition("@")
+    failures = FSPEC if fail_key == "combined" else None
+    arr = event_arrivals()
+    kw = dict(size_s=1.0, fleet=QFLEET, dispatcher=disp,
+              horizon_s=float(HORIZON), n_max=N_MAX, failures=failures)
+    assert_matches_golden(simulate_events(arr, **kw),
+                          GOLDENS["event"][key]["oracle"], ("oracle", key))
+    assert_matches_golden(simulate_events_batched(arr, **kw),
+                          GOLDENS["event"][key]["batched"], ("batched", key))
+
+
+def test_event_goldens_cover_every_registered_dispatcher():
+    pinned = {k.partition("@")[0] for k in EVENT_KEYS}
+    assert pinned == set(dispatch_policy_names())
+
+
+def test_event_sweep_local_backend_matches_goldens():
+    arr = event_arrivals()
+    cells, keys = [], []
+    for key in EVENT_KEYS:
+        disp, _, fail_key = key.partition("@")
+        cells.append(EventCell(
+            disp, arr, 1.0, QFLEET, horizon_s=float(HORIZON),
+            failures=FSPEC if fail_key == "combined" else None))
+        keys.append(key)
+    res = sweep_events(cells, n_max=N_MAX, w_fpga=16, w_cpu=32,
+                       backend=None)
+    for tot, key in zip(res, keys):
+        assert_matches_golden(tot, GOLDENS["event"][key]["batched"],
+                              ("event-sweep", res.backend, key))
+
+
+# ------------------------------------------------- forced-2-device mesh leg
+
+def test_mesh_backend_matches_goldens_two_devices():
+    """Every registered policy and dispatcher through `MeshBackend` on a
+    forced 2-device CPU host, against the same pinned goldens (counters
+    exact, energies 1e-5). Subprocess so the fabricated devices never
+    leak into this process."""
+    root = os.path.dirname(os.path.dirname(__file__))
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        os.environ["BENCH_SWEEP_BACKEND"] = "mesh"
+        import sys
+        sys.path.insert(0, "src")
+        sys.path.insert(0, "tests")
+        import jax
+        assert jax.device_count() == 2, jax.devices()
+        import test_policy_equivalence as eq
+        eq.test_sweep_local_backend_matches_goldens()
+        eq.test_event_sweep_local_backend_matches_goldens()
+        print("POLICY_MESH_GOLDENS_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, cwd=root,
+                         env={**os.environ, "BENCH_SWEEP_BACKEND": "mesh"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "POLICY_MESH_GOLDENS_OK" in out.stdout
+
+
+# --------------------------------------------------------- registry contracts
+
+def test_registry_resolution_and_errors():
+    p = get_rate_policy("spork")
+    assert get_rate_policy(p) is p                  # instances pass through
+    d = get_dispatch_policy("round_robin")
+    assert get_dispatch_policy(d) is d
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_rate_policy("nope")
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_dispatch_policy(None)
+    assert set(p.name for p in rate_policies()) == set(rate_policy_names())
+
+
+def test_register_rejects_duplicates_and_wrong_types():
+    with pytest.raises(ValueError, match="duplicate"):
+        register_rate(get_rate_policy("spork"))
+    with pytest.raises(ValueError, match="duplicate|already taken"):
+        register_dispatch(get_dispatch_policy("spork"))
+    with pytest.raises(TypeError):
+        RATE_REGISTRY.register(object())
+    with pytest.raises(TypeError):
+        DISPATCH_REGISTRY.register(get_rate_policy("spork"))
+
+
+def test_dispatch_codes_are_unique_and_stable():
+    codes = {p.name: p.code for p in dispatch_policies()}
+    assert len(set(codes.values())) == len(codes)
+    # the traced codes the batched engine compiled against — frozen
+    assert codes["spork"] == 0
+    assert codes["index_packing"] == 1
+    assert codes["round_robin"] == 2
+
+    @dataclass(frozen=True)
+    class Clash(DispatchPolicy):
+        name: str = "clash"
+        code: int = 0
+
+    with pytest.raises(ValueError, match="code 0 already taken"):
+        register_dispatch(Clash())
+
+
+def test_base_policy_contract_surface():
+    base = RatePolicy()
+    with pytest.raises(NotImplementedError):
+        base.allocator_tick(None, None, None, None)
+    d = DispatchPolicy(name="abstract-test")
+    for fn in (d.find_worker, d.find_worker_f):
+        with pytest.raises(NotImplementedError):
+            fn(None)
+    with pytest.raises(NotImplementedError):
+        d.combine(None)
+    # frozen + hashable: usable as jit static args and dict keys
+    assert hash(get_rate_policy("spork")) != hash(
+        get_rate_policy("spork_ideal"))
+    import dataclasses
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        base.name = "mutated"
+
+
+def test_plan_group_keys_carry_policy_objects():
+    """The tentpole wiring: a chunk's compiled program is selected by
+    the policy OBJECT in its static tuple, not a string."""
+    tr = rate_trace()
+    plan = plan_sweep([SweepCell(p, tr.counts, 0.05, DEFAULT_FLEET)
+                       for p in rate_policy_names()], n_max=N_MAX)
+    pols = {d.static[0] for d in plan.dispatches}
+    assert all(isinstance(p, RatePolicy) for p in pols)
+    assert {p.name for p in pols} == set(rate_policy_names())
+    assert "gain" in plan.dispatches[0].arrays
+
+
+def test_user_registered_policy_flows_through_engines():
+    """The plugin point: subclass + register, and every entry point
+    accepts the new name with NO engine edits. A re-named fpga_dynamic
+    twin must reproduce fpga_dynamic's golden exactly."""
+    from repro.policies.rate import FpgaDynamic
+
+    @dataclass(frozen=True)
+    class Twin(FpgaDynamic):
+        name: str = "test_twin"
+
+    if "test_twin" not in rate_policy_names():
+        register_rate(Twin())
+    tr = rate_trace()
+    tot = ratesim.simulate("test_twin", tr.counts, tr.request_size_s,
+                           DEFAULT_FLEET, headroom=2, n_max=N_MAX)
+    assert_matches_golden(tot, GOLDENS["rate"]["fpga_dynamic@h2"],
+                          ("plugin-twin",))
+    # and through plan/execute: its own program group, object as key
+    res = sweep([SweepCell("test_twin", tr.counts, tr.request_size_s,
+                           DEFAULT_FLEET, headroom=2)], n_max=N_MAX)
+    assert_matches_golden(res.totals(0), GOLDENS["rate"]["fpga_dynamic@h2"],
+                          ("plugin-twin-sweep",))
+
+
+def test_predictive_gain_zero_reduces_to_fpga_dynamic():
+    """The predictive policy's forecast is a pure extrapolation term:
+    gain 0 must reproduce fpga_dynamic bit-for-bit."""
+    tr = rate_trace()
+    a = ratesim.simulate("predictive", tr.counts, tr.request_size_s,
+                         DEFAULT_FLEET, headroom=2, n_max=N_MAX,
+                         forecast_gain=0.0)
+    b = ratesim.simulate("fpga_dynamic", tr.counts, tr.request_size_s,
+                         DEFAULT_FLEET, headroom=2, n_max=N_MAX)
+    for f in COUNTERS + ENERGIES:
+        assert getattr(a, f) == getattr(b, f), f
+
+
+def test_rate_params_pytree_shape():
+    p = RateParams.make(headroom=3, static_level=0, gain=1.5)
+    assert int(p.headroom) == 3 and float(p.gain) == 1.5
+    import jax
+    leaves = jax.tree_util.tree_leaves(p)
+    assert len(leaves) == 3                 # traced pytree, not static
+
+
+def test_dispatch_select_matches_each_policy_combine():
+    """The traced fold must agree with each policy's own combine rule
+    at every registered code."""
+    import jax.numpy as jnp
+    from repro.policies import dispatch_select
+    rng = np.random.default_rng(7)
+    W = 12
+    cand = Candidates(
+        f_found=jnp.asarray(rng.integers(0, 2, ()).astype(bool)),
+        c_found=jnp.asarray(rng.integers(0, 2, ()).astype(bool)),
+        av_f=jnp.float32(rng.uniform(0, 5)),
+        av_c=jnp.float32(rng.uniform(0, 5)),
+        oh_f=jnp.asarray(rng.integers(0, 2, W).astype(bool)),
+        oh_c=jnp.asarray(rng.integers(0, 2, W).astype(bool)),
+        rr_found=jnp.asarray(rng.integers(0, 2, ()).astype(bool)),
+        oh_rr=jnp.asarray(rng.integers(0, 2, W).astype(bool)))
+    for p in dispatch_policies():
+        want_found, want_oh = p.combine(cand)
+        got_found, got_oh = dispatch_select(jnp.int32(p.code), cand)
+        assert bool(want_found) == bool(got_found), p.name
+        np.testing.assert_array_equal(np.asarray(want_oh),
+                                      np.asarray(got_oh), err_msg=p.name)

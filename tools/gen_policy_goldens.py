@@ -1,0 +1,180 @@
+"""Pin policy-equivalence goldens (tests/goldens/policy_goldens.json).
+
+The policy-as-plugin refactor (repro.policies) must not change a single
+number the string-dispatch engines produced: Table 8/9 and every figure
+derive from them. This script records, for a fixed set of quantized
+instances, the exact `RunTotals` of
+
+  * every rate policy through `ratesim.simulate` (counters exact,
+    energies float32-accumulated), and
+  * every dispatch policy through both DES engines (`events.EventSim`
+    oracle and `events_batched`), with and without a failure spec,
+
+so tests/test_policy_equivalence.py can assert the plugin layer is
+bit-identical on counters and ~1e-5 on energies FOREVER — not merely
+that the engines agree with each other today.
+
+The committed goldens were generated at the pre-refactor commit (PR 7,
+string-dispatch `if policy == ...` engines). Re-running this script on
+later code must reproduce them; regenerate ONLY with an explicit
+semantic-change rationale recorded in docs/EXPERIMENTS.md.
+
+Usage:  PYTHONPATH=src python tools/gen_policy_goldens.py [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.metrics import RunTotals  # noqa: E402
+from repro.core.traces import synthetic_trace  # noqa: E402
+from repro.core.workers import DEFAULT_FLEET  # noqa: E402
+from repro.ft.failures import FailureSpec  # noqa: E402
+from repro.sim import ratesim  # noqa: E402
+from repro.sim.events import DISPATCHERS, simulate_events  # noqa: E402
+from repro.sim.events_batched import simulate_events_batched  # noqa: E402
+
+OUT = Path(__file__).resolve().parent.parent / "tests" / "goldens" \
+    / "policy_goldens.json"
+
+# Quantized fleet for the DES instances (CPU spin-up 1 s): float32 event
+# arithmetic is exact, so counters are bit-stable across engines/hosts.
+QFLEET = DEFAULT_FLEET.replace(cpu=DEFAULT_FLEET.cpu.replace(spin_up_s=1.0))
+HORIZON = 180
+N_MAX = 64
+
+GOLDEN_FIELDS = ("energy_j", "cost_usd", "work_cpu_s", "work_on_fpga_cpu_s",
+                 "work_on_cpu_cpu_s", "requests", "deadline_misses",
+                 "fpga_spinups", "cpu_spinups", "fpga_idle_j", "fpga_busy_j",
+                 "cpu_busy_j", "spinup_j", "retries", "failed_spinups",
+                 "crashes", "recovered_requests", "failure_misses",
+                 "wasted_spinup_j")
+
+# One failure spec exercising every failure mode at once, so the golden
+# also pins dispatch-under-failures through the plugin layer.
+FSPEC = FailureSpec(spinup_fail_p=0.125, max_retries=1, retry_backoff_s=2.0,
+                    crash_p=0.0625, max_failover=2, straggler_frac=0.125,
+                    straggler_factor=2.0, evac_frac=0.25, evac_start_s=80.0,
+                    evac_end_s=140.0, seed=11)
+
+
+def rate_trace():
+    return synthetic_trace(seed=3, bias=0.65, horizon_s=600,
+                           request_size_s=0.05, mean_demand_workers=10.0)
+
+
+def event_arrivals(seed: int = 0, hi: float = 8.0) -> np.ndarray:
+    """Integer arrival times, alternating high/low rate blocks (same
+    shape as tests/strategies.py bursty_trace)."""
+    rng = np.random.default_rng(seed)
+    rates = np.where((np.arange(HORIZON) // 20) % 2 == 0, hi, 0.5)
+    counts = rng.poisson(rates)
+    return np.repeat(np.arange(HORIZON, dtype=np.float64), counts)
+
+
+def tot_row(tot: RunTotals) -> dict:
+    return {f: (int(getattr(tot, f))
+                if f in RunTotals.COUNT_FIELDS else float(getattr(tot, f)))
+            for f in GOLDEN_FIELDS}
+
+
+def rate_cases() -> list[tuple[str, dict]]:
+    """(key, kwargs) for every pre-refactor rate policy; headroom only
+    matters for fpga_dynamic, energy_weight 0.5 adds a mixed-objective
+    spork variant."""
+    cases = [(p, dict(policy=p)) for p in
+             ("spork", "spork_ideal", "cpu_dynamic", "fpga_static",
+              "mark_ideal")]
+    cases.append(("spork@w0.5", dict(policy="spork", energy_weight=0.5)))
+    cases.append(("fpga_dynamic@h2", dict(policy="fpga_dynamic",
+                                          headroom=2)))
+    cases.append(("fpga_dynamic@h0", dict(policy="fpga_dynamic",
+                                          headroom=0)))
+    return cases
+
+
+def plugin_rate_cases() -> list[tuple[str, dict]]:
+    """Policies introduced WITH the plugin layer (no pre-refactor
+    twin): pinned at introduction so later work can't silently change
+    them. gain=0 must reduce the predictive policy to fpga_dynamic."""
+    return [
+        ("predictive@h2_g1", dict(policy="predictive", headroom=2,
+                                  forecast_gain=1.0)),
+        ("predictive@h2_g0.5", dict(policy="predictive", headroom=2,
+                                    forecast_gain=0.5)),
+        ("predictive@h0_g0", dict(policy="predictive", headroom=0,
+                                  forecast_gain=0.0)),
+    ]
+
+
+def build() -> dict:
+    tr = rate_trace()
+    rate, rate_plugin = {}, {}
+    for out, cases in ((rate, rate_cases()),
+                       (rate_plugin, plugin_rate_cases())):
+        for key, kw in cases:
+            tot = ratesim.simulate(counts=tr.counts,
+                                   size_s=tr.request_size_s,
+                                   fleet=DEFAULT_FLEET, n_max=N_MAX, **kw)
+            out[key] = tot_row(tot)
+
+    arr = event_arrivals()
+    event = {}
+    for disp in DISPATCHERS:
+        for fail_key, failures in (("none", None), ("combined", FSPEC)):
+            kw = dict(size_s=1.0, fleet=QFLEET, dispatcher=disp,
+                      horizon_s=float(HORIZON), n_max=N_MAX,
+                      failures=failures)
+            event[f"{disp}@{fail_key}"] = {
+                "oracle": tot_row(simulate_events(arr, **kw)),
+                "batched": tot_row(simulate_events_batched(arr, **kw)),
+            }
+
+    return {
+        "_meta": {
+            "pinned_from": "pre-policy-refactor string-dispatch engines "
+                           "(PR 7, commit fa2a726)",
+            "rate_trace": "synthetic_trace(seed=3, bias=0.65, "
+                          "horizon_s=600, request_size_s=0.05, "
+                          "mean_demand_workers=10.0), DEFAULT_FLEET, "
+                          f"n_max={N_MAX}",
+            "event_trace": "integer bursty trace (seed 0, hi 8.0, "
+                           f"horizon {HORIZON}s), size 1.0, QFLEET "
+                           f"(cpu spin-up 1s), n_max={N_MAX}",
+        },
+        "rate": rate,
+        "rate_plugin": rate_plugin,
+        "event": event,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="verify current code reproduces the pinned file")
+    args = ap.parse_args()
+    data = build()
+    if args.check:
+        pinned = json.loads(OUT.read_text())
+        for section in ("rate", "event", "rate_plugin"):
+            if section not in pinned:       # pinned before section existed
+                continue
+            assert data[section] == pinned[section], \
+                f"{section} goldens drifted — engines changed semantics"
+        print(f"OK: current code reproduces {OUT}")
+        return 0
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
