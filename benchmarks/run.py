@@ -21,8 +21,8 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
 def main() -> None:
     from benchmarks import (chaos_suite, fig2_pareto, fig4_spork_vs_mark,
                             fig5_sensitivity, fig6_worker_efficiency,
-                            fig7_request_sizes, policy_tuning, roofline,
-                            scenario_suite, table8_production,
+                            fig7_request_sizes, fleet_suite, policy_tuning,
+                            roofline, scenario_suite, table8_production,
                             table9_dispatch, warmup)
     from benchmarks.common import emit, timed
     from repro.sim.harness import invariants_enabled
@@ -41,6 +41,7 @@ def main() -> None:
         ("table9_dispatch", table9_dispatch.run),
         ("scenario_suite", scenario_suite.run),
         ("chaos_suite", chaos_suite.run),
+        ("fleet_suite", fleet_suite.run),
         ("fig4_spork_vs_mark", fig4_spork_vs_mark.run),
         ("fig5_sensitivity", fig5_sensitivity.run),
         ("fig6_worker_efficiency", fig6_worker_efficiency.run),

@@ -1,0 +1,28 @@
+"""repro.fleet — closed-loop multi-tenant fleet serving (ROADMAP item 6).
+
+N tenants (each a `repro.workloads` scenario or explicit stream, an SLO
+class, a fairness weight) share ONE FPGA+CPU fleet: router-level
+admission (`repro.policies.admission`) decides admit/shed per arrival,
+admitted requests flow through the unchanged dispatch + Spork allocator
+machinery, and per-tenant `repro.core.metrics.TenantTotals` rows
+reconcile against the fleet-level `RunTotals` (conservation checked by
+`repro.sim.harness.check_fleet_result`, default-on).
+
+Implemented twice per the repo's trust order:
+
+  * `FleetSim` / `simulate_fleet` (`repro.fleet.oracle`) — exact serial
+    oracle extending `repro.sim.events.EventSim` with tenant tags.
+  * `repro.fleet.engine` — batched twin (tenant axis in the scan state),
+    planned by `repro.sim.plan.plan_fleet` and executed by both
+    `repro.sim.exec` backends; `repro.sim.sweep.sweep_fleet` is the
+    one-call entry point.
+"""
+
+from repro.fleet.specs import (SLO_CLASSES, FleetCell, ResolvedFleet,
+                               TenantSpec, resolve_fleet_cell)
+from repro.fleet.oracle import FleetSim, simulate_fleet
+
+__all__ = [
+    "SLO_CLASSES", "FleetCell", "FleetSim", "ResolvedFleet", "TenantSpec",
+    "resolve_fleet_cell", "simulate_fleet",
+]

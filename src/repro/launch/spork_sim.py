@@ -2,31 +2,30 @@
 
 The sensitivity studies (Figs. 5-7) evaluate a grid of (worker config x
 burstiness x trace seed) points; each point is an independent run of the
-vectorized rate simulator. This launcher shards the grid across the mesh
-with shard_map: one program, every device simulating its slice.
+vectorized rate simulator. This launcher routes the grid through the
+production sweep stack — `repro.sim.plan.plan_sweep` builds the dispatch
+plan and `repro.sim.exec.get_backend` runs it, locally or `shard_map`-ped
+over the device mesh (`MeshBackend`):
 
-    PYTHONPATH=src python -m repro.launch.spork_sim --points 64 --mesh host
-    (dry-run path: repro.launch.dryrun exercises the same grid function)
+    PYTHONPATH=src python -m repro.launch.spork_sim --points 64 \
+        --backend mesh
 
-This launcher is the standalone demo of cell-axis sharding; the
-productionized version — the same idea behind the real sweep entry
-points, with planning, padding and bit-identity tests — is
-`repro.sim.exec.MeshBackend` (select with ``BENCH_SWEEP_BACKEND=mesh``).
+It used to carry its own hand-rolled ``shard_map`` twin of that
+machinery; the twin is gone — the CLI is now a thin demo of the same
+plan/execute path every benchmark suite uses (planning, padding,
+bit-identity tests included; docs/architecture.md "Execution backends").
 """
 
 from __future__ import annotations
 
 import argparse
-import functools
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.workers import DEFAULT_FLEET
-from repro.sim import ratesim
+from repro.sim.exec import execute, get_backend
+from repro.sim.plan import plan_sweep
+from repro.sim.sweep import SweepCell
 
 
 def sweep_grid(n_points: int, seed: int = 0, horizon_s: int = 1800,
@@ -45,55 +44,51 @@ def sweep_grid(n_points: int, seed: int = 0, horizon_s: int = 1800,
     return counts, biases, speeds, busy
 
 
-def run_point(counts, speedup, busy_w, size_s, interval_s, spin_up_s,
-              n_max=256):
-    """One simulator instance (jittable; vmapped/shard_mapped by caller)."""
-    fleet = DEFAULT_FLEET
-    fs = ratesim.FleetScalars.from_fleet(fleet)
-    fs = fs._replace(S=speedup, B_f=busy_w)
-    horizon = counts.shape[0]
-    acc = ratesim._simulate("spork", interval_s, spin_up_s, n_max, horizon,
-                            counts, jnp.float32(size_s), fs,
-                            jnp.float32(1.0), jnp.int32(0), jnp.int32(0))
-    energy = (acc.fpga_busy_j + acc.fpga_idle_j + acc.cpu_busy_j
-              + acc.cpu_idle_j + acc.spin_j)
-    ideal = (acc.work_f + acc.work_c) / speedup * busy_w
-    return jnp.stack([ideal / jnp.maximum(energy, 1e-9), acc.cost])
+def grid_cells(counts, speeds, busy, size_s: float = 0.05) -> list[SweepCell]:
+    """One `SweepCell` per grid point: the per-point worker config rides
+    in the cell's `FleetParams` (accelerator speedup + busy power), so
+    the planner groups and pads exactly like any other sweep."""
+    return [
+        SweepCell(policy="spork", counts=counts[i], size_s=size_s,
+                  fleet=DEFAULT_FLEET.replace(
+                      fpga=DEFAULT_FLEET.fpga.replace(
+                          speedup=float(speeds[i]),
+                          busy_w=float(busy[i]))))
+        for i in range(len(speeds))]
 
 
-def sharded_sweep(counts, speeds, busy, mesh: Mesh, size_s: float = 0.05,
-                  interval_s: int = 10, spin_up_s: int = 10):
-    """shard_map the per-point simulator over every mesh device."""
-    flat_axes = mesh.axis_names
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(flat_axes), P(flat_axes), P(flat_axes)),
-        out_specs=P(flat_axes), check_rep=False)
-    def run_shard(c, s, b):
-        def one(args):
-            cc, ss, bb = args
-            return run_point(cc, ss, bb, size_s, interval_s, spin_up_s)
-        return jax.lax.map(one, (c, s, b))
-
-    return run_shard(counts, speeds, busy)
+def run_grid(counts, speeds, busy, size_s: float = 0.05,
+             backend=None, n_max: int = 256):
+    """Run the grid through plan + execute; returns (eff, cost) per
+    point — ideal-busy-energy / simulated-energy and simulated $ cost."""
+    cells = grid_cells(counts, speeds, busy, size_s=size_s)
+    res = execute(plan_sweep(cells, n_max=n_max), get_backend(backend))
+    eff = np.zeros(len(cells))
+    cost = np.zeros(len(cells))
+    for i in range(len(cells)):
+        t = res.totals(i)
+        ideal = ((t.work_on_fpga_cpu_s + t.work_on_cpu_cpu_s)
+                 / float(speeds[i]) * float(busy[i]))
+        eff[i] = ideal / max(t.energy_j, 1e-9)
+        cost[i] = t.cost_usd
+    return eff, cost
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--points", type=int, default=8)
     ap.add_argument("--horizon", type=int, default=900)
+    ap.add_argument("--backend", default=None,
+                    help="sweep backend: local | mesh "
+                         "(default: BENCH_SWEEP_BACKEND or local)")
     args = ap.parse_args()
     counts, biases, speeds, busy = sweep_grid(args.points,
                                               horizon_s=args.horizon)
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("points",))
-    out = np.asarray(sharded_sweep(jnp.asarray(counts), jnp.asarray(speeds),
-                                   jnp.asarray(busy), mesh))
+    eff, cost = run_grid(counts, speeds, busy, backend=args.backend)
     for i in range(args.points):
         print(f"point {i}: bias={biases[i]:.2f} S={speeds[i]:.0f} "
-              f"B_f={busy[i]:.0f}W -> eff={out[i, 0]:.3f} "
-              f"cost=${out[i, 1]:.2f}")
+              f"B_f={busy[i]:.0f}W -> eff={eff[i]:.3f} "
+              f"cost=${cost[i]:.2f}")
 
 
 if __name__ == "__main__":

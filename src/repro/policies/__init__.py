@@ -15,9 +15,14 @@ Public surface:
     — resolution used by every engine entry point (str APIs unchanged).
   * `rate_policy_names()` / `dispatch_policy_names()` — registered
     names, registration order (dispatch order == traced codes).
-  * `register_rate(p)` / `register_dispatch(p)` — plugin points.
+  * `register_rate(p)` / `register_dispatch(p)` / `register_admission(p)`
+    — plugin points.
   * `RateParams` — the traced parameter pytree; `repro.policies.tune`
     gradient-tunes it through the rate simulator.
+  * `AdmissionPolicy` family (`repro.policies.admission`) — router-level
+    per-tenant shedding for the multi-tenant fleet layer (`repro.fleet`);
+    `get_admission_policy` / `admission_policy_names` mirror the other
+    two families.
 """
 
 from repro.policies.base import (DISPATCH_REGISTRY, RATE_REGISTRY,
@@ -25,13 +30,17 @@ from repro.policies.base import (DISPATCH_REGISTRY, RATE_REGISTRY,
                                  RateParams, RatePolicy)
 from repro.policies import des as _des  # noqa: F401  (registers dispatch)
 from repro.policies import rate as _rate  # noqa: F401  (registers rate)
+from repro.policies.admission import (ADMISSION_REGISTRY, AdmissionPolicy,
+                                      admission_decide)
 from repro.policies.des import dispatch_select
 
 __all__ = [
-    "Candidates", "DispatchPolicy", "RateCtx", "RateParams", "RatePolicy",
-    "dispatch_policies", "dispatch_policy_names", "dispatch_select",
-    "get_dispatch_policy", "get_rate_policy", "rate_policies",
-    "rate_policy_names", "register_dispatch", "register_rate",
+    "AdmissionPolicy", "Candidates", "DispatchPolicy", "RateCtx",
+    "RateParams", "RatePolicy", "admission_decide", "admission_policies",
+    "admission_policy_names", "dispatch_policies", "dispatch_policy_names",
+    "dispatch_select", "get_admission_policy", "get_dispatch_policy",
+    "get_rate_policy", "rate_policies", "rate_policy_names",
+    "register_admission", "register_dispatch", "register_rate",
 ]
 
 
@@ -78,3 +87,27 @@ def register_dispatch(policy: DispatchPolicy) -> DispatchPolicy:
             raise ValueError(
                 f"dispatch code {policy.code} already taken by {p.name!r}")
     return DISPATCH_REGISTRY.register(policy)
+
+
+def get_admission_policy(policy) -> AdmissionPolicy:
+    """Resolve an admission policy by name, or pass an instance through."""
+    return ADMISSION_REGISTRY.get(policy)
+
+
+def admission_policy_names() -> tuple[str, ...]:
+    return ADMISSION_REGISTRY.names()
+
+
+def admission_policies() -> tuple[AdmissionPolicy, ...]:
+    return ADMISSION_REGISTRY.all()
+
+
+def register_admission(policy: AdmissionPolicy) -> AdmissionPolicy:
+    """Register a new admission policy object (unique name AND unique
+    traced code — both fleet engines select the shared
+    `repro.policies.admission.admission_decide` kernel by the code)."""
+    for p in ADMISSION_REGISTRY.all():
+        if p.code == policy.code:
+            raise ValueError(
+                f"admission code {policy.code} already taken by {p.name!r}")
+    return ADMISSION_REGISTRY.register(policy)

@@ -1,2 +1,9 @@
 """Serving substrate: KV-cache engine + Spork-scheduled heterogeneous
-request routing (the paper's technique as a first-class feature)."""
+request routing (the paper's technique as a first-class feature).
+
+`engine.ServeEngine` is one model replica with deadline-tracked request
+slots (lane-masked continuous batching); `router.SporkRouter` drives the
+single-app scheduler online, and `router.TenantRouter` drives the
+multi-tenant fleet layer (`repro.fleet`) online — router-level admission
+(`repro.policies.admission`) in front of the shared-fleet dispatch.
+"""

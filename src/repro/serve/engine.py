@@ -37,8 +37,37 @@ class ServeEngine:
         self.slots = batch_slots
         self.max_len = max_len
         self.cache = model.init_cache(batch_slots, max_len)
+        # fresh per-slot state for slot resets on admission
+        self._blank = self.cache
         self.active: list[Request | None] = [None] * batch_slots
-        self._decode = jax.jit(model.decode_step)
+        # the batch axis of every cache leaf, found structurally: grow
+        # the batch by one and see which dim moved (KV caches carry it
+        # at axis 1, SSM/hybrid recurrent state at 2, lengths at 0 — no
+        # per-family table to maintain)
+        a = jax.eval_shape(lambda: model.init_cache(batch_slots, max_len))
+        b = jax.eval_shape(lambda: model.init_cache(batch_slots + 1,
+                                                    max_len))
+        self._axes = jax.tree.map(
+            lambda x, y: next(i for i, (p, q) in enumerate(
+                zip(x.shape, y.shape)) if p != q), a, b)
+        self._decode = jax.jit(self._masked_decode)
+
+    def _masked_decode(self, params, tokens, cache, lane_mask):
+        """One decode step that only ADVANCES the lanes in ``lane_mask``:
+        the model steps the full batch (one fixed-shape compiled
+        program), then every cache leaf keeps its old value on masked-out
+        lanes along that leaf's batch axis. Without the merge, a step
+        intended for one slot corrupts the others — attention caches are
+        written at every lane's current position and SSM/hybrid
+        *recurrent* state advances irreversibly on all lanes."""
+        new_cache, logits = self.model.decode_step(params, tokens, cache)
+
+        def merge(ax, new, old):
+            m = lane_mask.reshape([-1 if i == ax else 1
+                                   for i in range(new.ndim)])
+            return jnp.where(m, new, old)
+
+        return jax.tree.map(merge, self._axes, new_cache, cache), logits
 
     def _free_slot(self) -> int | None:
         for i, r in enumerate(self.active):
@@ -46,43 +75,49 @@ class ServeEngine:
                 return i
         return None
 
+    def _one_hot(self, slot: int) -> jnp.ndarray:
+        m = np.zeros((self.slots,), bool)
+        m[slot] = True
+        return jnp.asarray(m)
+
     def add_request(self, req: Request) -> bool:
-        """Admit a request into a free slot (prefill its prompt)."""
+        """Admit a request into a free slot: reset the slot's cache lanes
+        to blank state, then prefill its prompt one token at a time
+        through the lane-masked decode path (other active slots' caches
+        are untouched — tests/test_serve.py pins the interleaving)."""
         slot = self._free_slot()
         if slot is None:
             return False
         self.active[slot] = req
-        # sequential prefill through the decode path, one slot at a time:
-        # correct and simple; batched prefill is a serving optimization the
-        # roofline work covers separately.
-        cache = self.cache
+        mask = self._one_hot(slot)
+
+        def reset(ax, blank, cur):
+            m = mask.reshape([-1 if i == ax else 1
+                              for i in range(blank.ndim)])
+            return jnp.where(m, blank, cur)
+
+        cache = jax.tree.map(reset, self._axes, self._blank, self.cache)
         for tok in req.prompt:
             tokens = np.zeros((self.slots, 1), np.int32)
             tokens[slot, 0] = tok
-            cache = self._step_only_slot(cache, tokens, slot)
+            cache, _ = self._decode(self.params, jnp.asarray(tokens),
+                                    cache, mask)
         self.cache = cache
         return True
 
-    def _step_only_slot(self, cache, tokens, slot):
-        """Advance one slot's length without disturbing others: lengths are
-        per-slot, so we mask the length increment."""
-        new_cache, _ = self._decode(self.params, jnp.asarray(tokens), cache)
-        # decode_step increments every slot's length; undo for others
-        mask = np.zeros((self.slots,), np.int32)
-        mask[slot] = 1
-        fixed = cache["length"] + jnp.asarray(mask)
-        new_cache["length"] = fixed
-        return new_cache
-
     def step(self) -> list[tuple[int, int]]:
-        """Decode one token for all active slots; returns (rid, token)."""
+        """Decode one token for all active slots; returns (rid, token).
+        Inactive lanes are masked out of the cache update, so admitting
+        into a long-idle slot never inherits stale positions."""
         tokens = np.zeros((self.slots, 1), np.int32)
+        mask = np.zeros((self.slots,), bool)
         for i, r in enumerate(self.active):
             if r is not None:
+                mask[i] = True
                 tokens[i, 0] = (r.generated[-1] if r.generated
                                 else (r.prompt[-1] if len(r.prompt) else 0))
         self.cache, logits = self._decode(self.params, jnp.asarray(tokens),
-                                          self.cache)
+                                          self.cache, jnp.asarray(mask))
         out = []
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
         for i, r in enumerate(self.active):
@@ -95,6 +130,20 @@ class ServeEngine:
                 r.done = True
                 self.active[i] = None
         return out
+
+    def free_slots(self) -> int:
+        """Open slots (admission headroom for the router layer)."""
+        return self.slots - self.n_active
+
+    def expire(self, now_s: float) -> list[int]:
+        """Free the slots of requests whose deadline has passed without
+        completing; returns their rids (the router's miss accounting)."""
+        missed = []
+        for i, r in enumerate(self.active):
+            if r is not None and not r.done and now_s > r.deadline_s:
+                missed.append(r.rid)
+                self.active[i] = None
+        return missed
 
     @property
     def n_active(self) -> int:

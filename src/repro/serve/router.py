@@ -13,6 +13,11 @@ is the paper's machinery (Algs. 1-3 via sim.events.EventSim) driven
 online, including straggler hedging: a worker whose completion estimate
 slips past a request's deadline never receives it (CanMeetDeadline), so
 slow workers shed load to freshly spun CPU workers automatically.
+
+`TenantRouter` is the multi-tenant face of the same machinery: the
+fleet layer (`repro.fleet`) absorbed this module's role as the
+router-level admission layer — one shared fleet, N tenants, per-arrival
+admit/shed decisions from `repro.policies.admission` before dispatch.
 """
 
 from __future__ import annotations
@@ -86,6 +91,42 @@ def fleet_for_arch(arch: str, avg_new_tokens: int = 64,
         fpga=base.fpga.replace(speedup=sm.speedup),
         cpu=base.cpu.replace(speedup=1.0))
     return fleet, size_cpu_s
+
+
+class TenantRouter:
+    """Online multi-tenant router: the fleet layer's admission + dispatch
+    driven request-by-request over ONE shared fleet.
+
+    Wraps `repro.fleet.FleetSim` the way `SporkRouter` wraps `EventSim`:
+    `submit(t, tenant)` runs the cell's router-level admission policy
+    (`repro.policies.admission`, float32 — decisions bit-identical to
+    both batch engines) and, if admitted, dispatches with the tenant's
+    own size and SLO deadline; `finish` returns the fleet `Report` plus
+    the per-tenant `repro.core.metrics.TenantTotals` rows. Batch-path
+    equivalence (online submit == `repro.fleet.simulate_fleet` on the
+    same stream) is pinned by tests/test_serve.py."""
+
+    def __init__(self, cell, n_max: int = 512):
+        from repro.fleet import FleetSim, resolve_fleet_cell
+        self.cell = cell
+        self.sim = FleetSim(cell, n_max=n_max)
+        self.horizon = resolve_fleet_cell(cell).horizon_s
+        self.sim.schedule_ticks(self.horizon)
+
+    def submit(self, t: float, tenant: int) -> bool:
+        """One tenant request at time t; returns admitted (False = shed)."""
+        return self.sim.submit_tagged(t, tenant)
+
+    def advance(self, t: float) -> None:
+        self.sim.drain_until(t, self.horizon)
+
+    def finish(self) -> tuple[Report, list]:
+        # drain the WHOLE event heap (spin-ups/reclaims can land past
+        # the horizon) — `FleetSim.run_tagged` does the same, and the
+        # online==batch equivalence is exact only if both settle alike
+        self.sim.drain_until(float("inf"), self.horizon)
+        totals, rows = self.sim.finalize_fleet(self.horizon)
+        return report(totals, self.cell.fleet), rows
 
 
 class SporkRouter:

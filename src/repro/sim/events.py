@@ -82,7 +82,14 @@ class _Worker:
 
 
 class EventSim:
-    """One application, one fleet, one dispatch policy, one objective."""
+    """One application, one fleet, one dispatch policy, one objective.
+
+    Contract relied on by the multi-tenant subclass
+    (`repro.fleet.oracle.FleetSim`): ``self.size`` and ``self.deadline``
+    are read *per arrival* by `_on_arrival` / `_assign` and never by the
+    allocator tick or settlement paths, so a subclass may swap them
+    before each arrival to model heterogeneous requests without touching
+    the dispatch/allocator machinery."""
 
     def __init__(self, fleet: FleetParams, size_s: float,
                  dispatcher: str = "spork", energy_weight: float = 1.0,

@@ -806,25 +806,40 @@ class EventCell:
                 f"{np.shape(self.seed)}")
 
 
-def _entries(arr: np.ndarray, interval_s: float,
-             horizon: float) -> list[tuple[np.ndarray, float | None]]:
+def _entries(arr: np.ndarray, interval_s: float, horizon: float,
+             payload: np.ndarray | None = None) -> list[tuple]:
     """Flat entry stream for one cell: fixed-width arrival blocks with
     tick markers riding on the last block of each interval. Bucket k
     holds arrivals in ((k-1)*T_s, k*T_s] so every arrival precedes its
     tick (the oracle pops arrivals before same-time events), and the
-    final bucket holds the post-last-tick tail."""
+    final bucket holds the post-last-tick tail.
+
+    With ``payload`` (a per-arrival array aligned with ``arr``, e.g. the
+    fleet layer's tenant indices) entries are ``(row, pay_row, tick)``
+    3-tuples, the payload sliced identically to the times; otherwise the
+    original ``(row, tick)`` 2-tuples."""
     K = int(np.ceil(horizon / interval_s))
     idx = np.minimum(np.ceil(np.asarray(arr, np.float64) / interval_s)
                      .astype(np.int64), K)
     idx = np.maximum(idx, 0)
-    out: list[tuple[np.ndarray, float | None]] = []
+    out: list[tuple] = []
     for k in range(K + 1):
-        b = np.asarray(arr)[idx == k]
+        sel = idx == k
+        b = np.asarray(arr)[sel]
         blocks = ([b[j:j + BLOCK] for j in range(0, len(b), BLOCK)]
                   or [b[:0]])
+        if payload is not None:
+            p = np.asarray(payload)[sel]
+            pblocks = ([p[j:j + BLOCK] for j in range(0, len(p), BLOCK)]
+                       or [p[:0]])
         tick = k * interval_s if k < K else None
-        out.extend((r, None) for r in blocks[:-1])
-        out.append((blocks[-1], tick))
+        if payload is None:
+            out.extend((r, None) for r in blocks[:-1])
+            out.append((blocks[-1], tick))
+        else:
+            out.extend((r, pr, None)
+                       for r, pr in zip(blocks[:-1], pblocks[:-1]))
+            out.append((blocks[-1], pblocks[-1], tick))
     return out
 
 

@@ -53,7 +53,8 @@ import jax.numpy as jnp
 from repro.policies import RateParams
 from repro.sim import events_batched, ratesim
 from repro.sim.plan import (Accum, ChunkDispatch, EventSweepResult,
-                            SweepPlan, SweepResult, accum_to_totals)
+                            FleetSweepResult, SweepPlan, SweepResult,
+                            accum_to_totals)
 
 ENV_VAR = "BENCH_SWEEP_BACKEND"
 
@@ -90,6 +91,26 @@ def _event_args(d: ChunkDispatch) -> tuple:
             jnp.asarray(a["tick_t"]), jnp.asarray(a["is_tick"]))
 
 
+def _fleet_args(d: ChunkDispatch) -> tuple:
+    """Traced arguments for `repro.fleet.engine._simulate_fleet_cells`:
+    the event layout (`_event_args`) plus the tenant axis — per-arrival
+    tenant indices and the padded per-tenant size/deadline/admission
+    tables."""
+    a = d.arrays
+    es = events_batched.EventScalars(
+        *(jnp.asarray(a["scalars"][:, j])
+          for j in range(a["scalars"].shape[1])),
+        f_seed=jnp.asarray(a["fail_seed"]),
+        max_fpgas=jnp.asarray(a["max_fpgas"]),
+        allocate=jnp.asarray(a["allocate"]))
+    return (es, jnp.asarray(a["codes"]), jnp.asarray(a["acodes"]),
+            jnp.asarray(a["times"]), jnp.asarray(a["tids"]),
+            jnp.asarray(a["tick_t"]), jnp.asarray(a["is_tick"]),
+            jnp.asarray(a["ta_size"]), jnp.asarray(a["ta_deadline"]),
+            jnp.asarray(a["adm_rate"]), jnp.asarray(a["adm_burst"]),
+            jnp.asarray(a["adm_quota"]))
+
+
 class Backend:
     """One way of running a plan's dispatches. Subclasses implement
     `run(dispatch)` (returning the core's output pytree) and
@@ -121,6 +142,10 @@ class LocalBackend(Backend):
     def run(self, d: ChunkDispatch):
         if d.kind == "rate":
             return ratesim._simulate_cells(*d.static, *_rate_args(d))
+        if d.kind == "fleet":
+            from repro.fleet import engine as fleet_engine
+            return fleet_engine._simulate_fleet_cells(*d.static,
+                                                      *_fleet_args(d))
         return events_batched._simulate_cells(*d.static, *_event_args(d))
 
 
@@ -164,8 +189,13 @@ class MeshBackend(Backend):
 
             from repro.launch.mesh import make_cell_mesh
             mesh = make_cell_mesh(self.devices[:n_dev])
-            core = (ratesim._simulate_cells_core if kind == "rate"
-                    else events_batched._simulate_cells_core)
+            if kind == "rate":
+                core = ratesim._simulate_cells_core
+            elif kind == "fleet":
+                from repro.fleet import engine as fleet_engine
+                core = fleet_engine._simulate_fleet_cells_core
+            else:
+                core = events_batched._simulate_cells_core
             sharded = shard_map(functools.partial(core, *static),
                                 mesh=mesh, in_specs=P("cells"),
                                 out_specs=P("cells"), check_rep=False)
@@ -174,7 +204,8 @@ class MeshBackend(Backend):
 
     def run(self, d: ChunkDispatch):
         fn = self._fn(d.kind, d.static, self.devices_for(d))
-        args = _rate_args(d) if d.kind == "rate" else _event_args(d)
+        args = {"rate": _rate_args,
+                "fleet": _fleet_args}.get(d.kind, _event_args)(d)
         return fn(*args)
 
 
@@ -201,7 +232,8 @@ def execute(plan: SweepPlan, backend: str | Backend | None = None, *,
             checkpoint_dir=None, retry=None, validate: bool | None = None):
     """Run every dispatch of a plan on a backend and scatter the rows
     back into cell order. Returns `SweepResult` for rate plans,
-    `EventSweepResult` for event plans; both carry ``n_dispatches``, the
+    `EventSweepResult` for event plans and `FleetSweepResult` for
+    multi-tenant fleet plans; all carry ``n_dispatches``, the
     backend's ``n_devices`` / per-dispatch device counts, and the
     resilience ``meta`` record.
 
@@ -220,6 +252,8 @@ def execute(plan: SweepPlan, backend: str | Backend | None = None, *,
                              retry=retry)
     if plan.kind == "rate":
         res = _execute_rate(plan, backend, runner)
+    elif plan.kind == "fleet":
+        res = _execute_fleet(plan, backend, runner)
     else:
         res = _execute_event(plan, backend, runner)
     res.meta.update(runner.meta())
@@ -273,6 +307,69 @@ def _execute_event(plan: SweepPlan, backend: Backend,
             tot.breakdown["slot_overflow"] = int(over_np[r])
             out[i] = tot
     return EventSweepResult(plan.cells, out, n_dispatches=plan.n_dispatches,
+                            backend=backend.name,
+                            n_devices=backend.n_devices,
+                            dispatch_devices=devs)
+
+
+def _execute_fleet(plan: SweepPlan, backend: Backend,
+                   runner) -> FleetSweepResult:
+    """Scatter fleet-dispatch outputs into per-cell fleet `RunTotals` +
+    per-tenant `TenantTotals` rows. Conservation is BY CONSTRUCTION:
+    the fleet-level requests / work / misses / work-split are computed
+    from the per-tenant accumulators themselves (then energy/cost are
+    attributed back out of the fleet totals), so the tenant rows always
+    reconcile — `repro.sim.harness.check_fleet_result` enforces it."""
+    from repro.core.metrics import attribute_tenants
+    from repro.fleet.specs import resolve_fleet_cell
+
+    out = [None] * len(plan.cells)
+    tenants = [None] * len(plan.cells)
+    devs = []
+    for d in plan.dispatches:
+        acc, fail, over, fa = runner.run(d)
+        devs.append(backend.devices_for(d))
+        acc_np = [np.asarray(leaf) for leaf in acc]
+        fail_np = [np.asarray(leaf) for leaf in fail]
+        over_np = np.asarray(over)
+        fa_np = [np.asarray(leaf) for leaf in fa]
+        for r, i in enumerate(d.cell_idx):
+            cell = plan.cells[i]
+            rs = resolve_fleet_cell(cell)       # lru-cached
+            n = rs.n_tenants
+            offered, admitted, shed, missed, work_f, work_c = (
+                leaf[r, :n] for leaf in fa_np)
+            n_adm = int(admitted.sum())
+            work = float((admitted.astype(np.float64) * rs.sizes).sum())
+            tot = accum_to_totals(Accum(*[leaf[r] for leaf in acc_np]),
+                                  work, n_adm)
+            fl = events_batched.FailAcc(*[leaf[r] for leaf in fail_np])
+            tot.retries = int(fl.retries)
+            tot.failed_spinups = int(fl.failed_spins)
+            tot.crashes = int(fl.crashes)
+            tot.recovered_requests = int(fl.recovered)
+            tot.failure_misses = int(fl.fail_misses)
+            tot.wasted_spinup_j = float(fl.wasted_j)
+            tot.energy_j += float(fl.wasted_j)
+            tot.cost_usd += float(fl.extra_cost)
+            # per-tenant sums ARE the fleet-level numbers (each arrival
+            # increments exactly one tenant's counter and the matching
+            # shared counter, so these agree with the Accum up to f32)
+            tot.deadline_misses = int(missed.sum())
+            tot.work_on_fpga_cpu_s = float(
+                work_f.astype(np.float64).sum())
+            tot.work_on_cpu_cpu_s = float(
+                work_c.astype(np.float64).sum())
+            tot.breakdown["slot_overflow"] = int(over_np[r])
+            tot.breakdown["offered_requests"] = int(offered.sum())
+            tot.breakdown["shed_requests"] = int(shed.sum())
+            out[i] = tot
+            tenants[i] = attribute_tenants(
+                tot, rs.weights, rs.sizes, offered, admitted, shed,
+                missed, work_f.astype(np.float64),
+                work_c.astype(np.float64))
+    return FleetSweepResult(plan.cells, out, tenants,
+                            n_dispatches=plan.n_dispatches,
                             backend=backend.name,
                             n_devices=backend.n_devices,
                             dispatch_devices=devs)

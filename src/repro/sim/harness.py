@@ -117,6 +117,9 @@ INVARIANTS = {
                          "never exceed total energy_j",
     "drift": "serial-vs-batched engine totals agree within rtol "
              "(check_drift; not run per-sweep)",
+    "tenant_conservation": "per-tenant TenantTotals rows reconcile with "
+                           "the fleet-level RunTotals (admitted/shed/"
+                           "missed exactly; work/energy/cost to float)",
 }
 
 # Served work may exceed offered work only by float32 accumulation drift
@@ -221,11 +224,67 @@ def check_accum(accum: Accum, work: np.ndarray | None,
                 "drift", where or f"cell {i}")
 
 
+def check_fleet_result(result, where: str = "") -> None:
+    """Validate a `FleetSweepResult`: the per-cell `RunTotals` pass plus
+    the tenant conservation contract (`repro.core.metrics.TenantTotals`
+    docstring) — per-tenant rows must reconcile with the fleet totals:
+    exactly on admitted/shed/missed counters, to float rounding on
+    work/energy/cost attribution."""
+    for i, (t, rows) in enumerate(zip(result._totals, result._tenants)):
+        loc = f"{where}cell {i}".strip()
+        check_totals(t, where=loc)
+        adm = sum(r.admitted for r in rows)
+        shed = sum(r.shed for r in rows)
+        offered = sum(r.requests for r in rows)
+        missed = sum(r.deadline_misses for r in rows)
+        exact = [
+            ("sum(admitted)", adm, "requests", t.requests),
+            ("sum(shed)", shed, "breakdown[shed_requests]",
+             t.breakdown.get("shed_requests", 0)),
+            ("sum(offered)", offered, "breakdown[offered_requests]",
+             t.breakdown.get("offered_requests", 0)),
+            ("sum(deadline_misses)", missed, "deadline_misses",
+             t.deadline_misses),
+        ]
+        for na, a, nb, b in exact:
+            if int(a) != int(b):
+                raise InvariantViolation(
+                    "tenant_conservation", f"{na} ({a}) != {nb} ({b})", loc)
+        for r in rows:
+            if r.admitted + r.shed != r.requests:
+                raise InvariantViolation(
+                    "tenant_conservation",
+                    f"tenant {r.tenant}: admitted ({r.admitted}) + shed "
+                    f"({r.shed}) != requests ({r.requests})", loc)
+            if r.deadline_misses > r.admitted:
+                raise InvariantViolation(
+                    "tenant_conservation",
+                    f"tenant {r.tenant}: deadline_misses "
+                    f"({r.deadline_misses}) > admitted ({r.admitted})", loc)
+        approx = [
+            ("sum(work_on_fpga_cpu_s)",
+             sum(r.work_on_fpga_cpu_s for r in rows), t.work_on_fpga_cpu_s),
+            ("sum(work_on_cpu_cpu_s)",
+             sum(r.work_on_cpu_cpu_s for r in rows), t.work_on_cpu_cpu_s),
+            ("sum(energy_j)", sum(r.energy_j for r in rows), t.energy_j),
+            ("sum(cost_usd)", sum(r.cost_usd for r in rows), t.cost_usd),
+        ]
+        for name, a, b in approx:
+            if abs(a - b) > max(abs(b), 1.0) * 1e-6:
+                raise InvariantViolation(
+                    "tenant_conservation",
+                    f"{name} ({a:.9g}) != fleet total ({b:.9g})", loc)
+
+
 def check_sweep_result(result, where: str = "") -> None:
-    """Validate a `SweepResult` (vectorized accumulator pass) or
-    `EventSweepResult` (per-cell `RunTotals` pass). No-op when
+    """Validate a `SweepResult` (vectorized accumulator pass),
+    `EventSweepResult` (per-cell `RunTotals` pass) or `FleetSweepResult`
+    (totals pass + tenant conservation). No-op when
     ``REPRO_SKIP_INVARIANTS`` opts out — callers gate themselves;
     `repro.sim.exec.execute` is the default call site."""
+    if getattr(result, "_tenants", None) is not None:  # FleetSweepResult
+        check_fleet_result(result, where=where)
+        return
     totals = getattr(result, "_totals", None)
     if totals is not None:            # EventSweepResult
         for i, t in enumerate(totals):
@@ -347,6 +406,9 @@ def _flatten_output(kind: str, out) -> list[np.ndarray]:
     """Flat, host-side leaf list of one dispatch's output pytree."""
     if kind == "rate":
         leaves = list(out)                       # Accum
+    elif kind == "fleet":
+        acc, fail, over, fa = out                # (... , FleetTenantAcc)
+        leaves = list(acc) + list(fail) + [over] + list(fa)
     else:
         acc, fail, over = out                    # (Accum, FailAcc, overflow)
         leaves = list(acc) + list(fail) + [over]
@@ -361,6 +423,11 @@ def _reassemble_output(kind: str, leaves: Sequence[np.ndarray]):
     from repro.sim.events_batched import FailAcc
     n = len(Accum._fields)
     m = len(FailAcc._fields)
+    if kind == "fleet":
+        from repro.fleet.engine import FleetTenantAcc
+        k = n + m + 1
+        return (Accum(*leaves[:n]), FailAcc(*leaves[n:n + m]), leaves[n + m],
+                FleetTenantAcc(*leaves[k:k + len(FleetTenantAcc._fields)]))
     return (Accum(*leaves[:n]), FailAcc(*leaves[n:n + m]), leaves[n + m])
 
 

@@ -352,6 +352,121 @@ def plan_events(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
     return SweepPlan("event", cells, dispatches, n_max)
 
 
+def plan_fleet(cells: Iterable, n_max: int = 512, w_fpga: int = 32,
+               w_cpu: int = 64) -> SweepPlan:
+    """Plan a multi-tenant fleet sweep (`repro.fleet.FleetCell` cells):
+    the DES plan machinery of `plan_events` with a tenant axis — each
+    cell's merged tenant-tagged stream (`repro.fleet.resolve_fleet_cell`)
+    becomes ``times`` + ``tids`` entry blocks, and per-tenant
+    size/deadline/admission tables ride along padded to a power-of-two
+    tenant count. Groups key on (padded entry count, padded tenant
+    count, failure static), so a 1024-tenant policy x seed grid whose
+    cells share stream/tenant shape is a handful of dispatches
+    (benchmarks/fleet_suite.py asserts the budget).
+
+    Execution: `repro.sim.exec` routes ``kind="fleet"`` dispatches to
+    `repro.fleet.engine` on either backend; `repro.sim.sweep.sweep_fleet`
+    is the plan+execute wrapper returning a `FleetSweepResult`."""
+    from repro.fleet.specs import FleetCell, resolve_fleet_cell
+    from repro.sim.events_batched import EventCell
+
+    cells = list(cells)
+    entries: dict[int, list] = {}
+    resolved: dict[int, Any] = {}
+    groups: dict[tuple, list[int]] = {}
+    codes, acodes = {}, {}
+    from repro.policies import get_admission_policy
+    for i, cl in enumerate(cells):
+        if not isinstance(cl, FleetCell):
+            raise TypeError(
+                f"plan_fleet needs repro.fleet.FleetCell cells, got "
+                f"{type(cl).__name__}")
+        rs = resolve_fleet_cell(cl)
+        resolved[i] = rs
+        codes[i] = get_dispatch_policy(cl.dispatcher).code
+        acodes[i] = get_admission_policy(cl.admission).code
+        entries[i] = _entries(rs.times, cl.fleet.T_s, rs.horizon_s,
+                              payload=rs.tids)
+        n_e = len(entries[i])
+        E = (_pad_pow2(n_e, lo=4) if n_e <= 256
+             else 256 * int(math.ceil(n_e / 256)))
+        N_pad = _pad_pow2(rs.n_tenants, lo=4)
+        groups.setdefault((E, N_pad, fail_static(rs.failures)),
+                          []).append(i)
+
+    def _proxy(i: int) -> EventCell:
+        # an EventCell twin carrying the cell's fleet/objective axes so
+        # `_scalars` stays the single source of truth; size/deadline are
+        # tenant 0's (overridden per arrival by the tenant tables)
+        cl, rs = cells[i], resolved[i]
+        return EventCell(dispatcher=cl.dispatcher,
+                         size_s=float(rs.sizes[0]), fleet=cl.fleet,
+                         energy_weight=cl.energy_weight,
+                         deadline_s=float(rs.deadlines[0]),
+                         allocate_fpgas=cl.allocate_fpgas,
+                         failures=rs.failures)
+
+    def _tenant_table(i: int, n_pad: int) -> np.ndarray:
+        # (5, N_pad) f32 rows: size, deadline, adm_rate/burst/quota.
+        # Padded tenant slots are never referenced by any tid; 1.0
+        # size/deadline keeps them valid EventScalars values.
+        rs = resolved[i]
+        tbl = np.zeros((5, n_pad), np.float32)
+        tbl[0, :] = tbl[1, :] = 1.0
+        n = rs.n_tenants
+        tbl[0, :n] = rs.sizes
+        tbl[1, :n] = rs.deadlines
+        tbl[2, :n] = rs.adm_rate
+        tbl[3, :n] = rs.adm_burst
+        tbl[4, :n] = rs.adm_quota
+        return tbl
+
+    dispatches: list[ChunkDispatch] = []
+    for (E, N_pad, fstat), idxs in groups.items():
+        chunk = _pad_pow2(len(idxs), lo=4, hi=EV_CHUNK_MAX)
+        start = 0
+        while start < len(idxs):
+            sl = idxs[start:start + chunk]
+            start += chunk
+            pad = sl + [sl[0]] * (chunk - len(sl))
+            times = np.full((len(pad), E, BLOCK), np.inf, np.float32)
+            tids = np.zeros((len(pad), E, BLOCK), np.int32)
+            tick_t = np.zeros((len(pad), E), np.float32)
+            is_tick = np.zeros((len(pad), E), bool)
+            for r, i in enumerate(pad):
+                for e, (row, prow, tick) in enumerate(entries[i]):
+                    times[r, e, :len(row)] = row
+                    tids[r, e, :len(prow)] = prow
+                    if tick is not None:
+                        tick_t[r, e] = tick
+                        is_tick[r, e] = True
+            tables = np.stack([_tenant_table(i, N_pad) for i in pad])
+            arrays = {
+                "scalars": np.array([_scalars(_proxy(i))[:-2] for i in pad],
+                                    np.float32),
+                "fail_seed": np.array(
+                    [(resolved[i].failures.seed
+                      if resolved[i].failures is not None else 0)
+                     for i in pad], np.uint32),
+                "max_fpgas": np.array([cells[i].fleet.max_fpgas
+                                       for i in pad], np.int32),
+                "allocate": np.array([cells[i].allocate_fpgas
+                                      for i in pad], bool),
+                "codes": np.array([codes[i] for i in pad], np.int32),
+                "acodes": np.array([acodes[i] for i in pad], np.int32),
+                "times": times, "tids": tids,
+                "tick_t": tick_t, "is_tick": is_tick,
+                "ta_size": tables[:, 0], "ta_deadline": tables[:, 1],
+                "adm_rate": tables[:, 2], "adm_burst": tables[:, 3],
+                "adm_quota": tables[:, 4],
+            }
+            dispatches.append(ChunkDispatch(
+                kind="fleet", static=(n_max, w_fpga, w_cpu, fstat),
+                arrays=arrays, cell_idx=tuple(sl), chunk=chunk))
+
+    return SweepPlan("fleet", cells, dispatches, n_max)
+
+
 class SweepResult:
     """Stacked per-cell `Accum` + conversion to paper-style totals/reports.
 
@@ -443,3 +558,27 @@ class EventSweepResult:
                reference_fleet: FleetParams | None = None) -> Report:
         return report(self._totals[i], self.cells[i].fleet,
                       reference_fleet=reference_fleet)
+
+
+class FleetSweepResult(EventSweepResult):
+    """Multi-tenant counterpart of `EventSweepResult`: per-cell fleet
+    `RunTotals` (cell order, with ``breakdown['offered_requests']`` /
+    ``['shed_requests']``) plus per-cell, per-tenant
+    `repro.core.metrics.TenantTotals` rows. The tenant rows conserve
+    against the fleet totals — `repro.sim.harness.check_fleet_result`
+    verifies it on every execution (default-on invariant guard)."""
+
+    def __init__(self, cells: Sequence, totals: Sequence[RunTotals],
+                 tenants: Sequence[list], n_dispatches: int = 0,
+                 backend: str = "local", n_devices: int = 1,
+                 dispatch_devices: Sequence[int] | None = None,
+                 meta: dict | None = None):
+        super().__init__(cells, totals, n_dispatches=n_dispatches,
+                         backend=backend, n_devices=n_devices,
+                         dispatch_devices=dispatch_devices, meta=meta)
+        self._tenants = list(tenants)
+
+    def tenants(self, i: int | None = None):
+        """Per-tenant `TenantTotals` rows for every cell (cell order) or
+        for one cell."""
+        return list(self._tenants) if i is None else self._tenants[i]

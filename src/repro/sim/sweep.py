@@ -42,14 +42,15 @@ from repro.core.workers import DEFAULT_FLEET, FleetParams
 from repro.sim.events_batched import EventCell
 from repro.sim.exec import Backend, execute
 from repro.sim.plan import (CHUNK, CHUNK_BIG, _N_MAX_CAP, EventSweepResult,
-                            SweepPlan, SweepResult, plan_events, plan_sweep,
+                            FleetSweepResult, SweepPlan, SweepResult,
+                            plan_events, plan_fleet, plan_sweep,
                             resolve_scenarios)
 from repro.sim.ratesim import headroom_unit
 
 __all__ = [
-    "SweepCell", "EventCell", "SweepResult", "EventSweepResult", "SweepPlan",
-    "sweep", "sweep_events", "tune_fpga_dynamic_cells", "resolve_scenarios",
-    "CHUNK", "CHUNK_BIG",
+    "SweepCell", "EventCell", "SweepResult", "EventSweepResult",
+    "FleetSweepResult", "SweepPlan", "sweep", "sweep_events", "sweep_fleet",
+    "tune_fpga_dynamic_cells", "resolve_scenarios", "CHUNK", "CHUNK_BIG",
 ]
 
 
@@ -161,6 +162,27 @@ def sweep_events(cells: Iterable[EventCell], n_max: int = 512,
     "Execution hardening").
     """
     plan = plan_events(cells, n_max=n_max, w_fpga=w_fpga, w_cpu=w_cpu)
+    return execute(plan, backend, checkpoint_dir=checkpoint_dir, retry=retry)
+
+
+def sweep_fleet(cells, n_max: int = 512, w_fpga: int = 32, w_cpu: int = 64,
+                backend: str | Backend | None = None,
+                checkpoint_dir=None, retry=None) -> FleetSweepResult:
+    """Multi-tenant fleet cells (`repro.fleet.FleetCell`) in sweep grids.
+
+    Each cell is N tenants sharing ONE fleet under one dispatch policy
+    and one admission policy; the batched engine (`repro.fleet.engine`)
+    carries the tenant axis inside the scan state, so a 1024-tenant x
+    policy x seed grid is a handful of dispatches on either backend
+    (benchmarks/fleet_suite.py asserts the budget). Returns a
+    `FleetSweepResult`: cell-ordered fleet `RunTotals` (with
+    ``breakdown['offered_requests']`` / ``['shed_requests']``) plus
+    per-tenant `repro.core.metrics.TenantTotals` rows via
+    ``.tenants(i)`` — conservation-checked against the fleet totals by
+    the default-on invariant guards
+    (`repro.sim.harness.check_fleet_result`). ``checkpoint_dir`` /
+    ``retry`` harden execution exactly as in `sweep`."""
+    plan = plan_fleet(cells, n_max=n_max, w_fpga=w_fpga, w_cpu=w_cpu)
     return execute(plan, backend, checkpoint_dir=checkpoint_dir, retry=retry)
 
 

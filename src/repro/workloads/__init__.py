@@ -12,8 +12,10 @@ scenario x policy x seed grids are first-class sweep axes.
 from repro.workloads import generators, ingest, registry, stats
 from repro.workloads.scenarios import (ScenarioBatch, ScenarioSpec, Trace,
                                        realize, scenario_traces)
+from repro.workloads.tenants import tenant_population, zipf_weights
 
 __all__ = [
     "ScenarioBatch", "ScenarioSpec", "Trace", "generators", "ingest",
-    "realize", "registry", "scenario_traces", "stats",
+    "realize", "registry", "scenario_traces", "stats", "tenant_population",
+    "zipf_weights",
 ]

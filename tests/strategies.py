@@ -25,7 +25,9 @@ except ImportError:                                  # pragma: no cover
 
 from repro.core.traces import synthetic_trace
 from repro.core.workers import DEFAULT_FLEET, FleetParams
+from repro.fleet import SLO_CLASSES, FleetCell, TenantSpec
 from repro.ft.failures import FailureSpec
+from repro.policies import admission_policy_names
 from repro.sim.events import DISPATCHERS
 from repro.sim.ratesim import POLICIES
 from repro.sim.sweep import EventCell, SweepCell
@@ -34,7 +36,8 @@ from repro.workloads import registry
 __all__ = [
     "rate_policy_names", "dispatcher_names", "fleets", "failure_specs",
     "disabled_failure_specs", "scenario_specs", "trace_counts",
-    "arrival_streams", "sweep_cells", "event_cells",
+    "arrival_streams", "sweep_cells", "event_cells", "tenant_specs",
+    "fleet_cells",
 ]
 
 
@@ -143,3 +146,36 @@ def event_cells(horizon_s: float = 60.0, with_failures: bool = False,
         lambda disp, arr, fleet, f: EventCell(
             disp, arr, 1.0, fleet, horizon_s=horizon_s, failures=f),
         dispatcher_names, arrival_streams(horizon_s), fleets(), fail)
+
+
+def tenant_specs(horizon_s: float = 60.0) -> "st.SearchStrategy":
+    """Explicit-stream tenants on the dyadic grid (integer/8 arrival
+    times, power-of-two sizes and weights) so the fleet engines'
+    exact-counter contract applies to every drawn cell."""
+    def build(seed, n, size, slo, weight):
+        rng = np.random.default_rng(seed)
+        arr = np.sort(rng.integers(0, int(horizon_s) * 8, n)) / 8.0
+        return TenantSpec(arrival_times=tuple(arr), request_size_s=size,
+                          slo=slo, weight=weight, seed=seed)
+    return st.builds(
+        build, st.integers(min_value=0, max_value=2**16),
+        st.integers(min_value=5, max_value=30),
+        st.sampled_from([0.0625, 0.125, 0.25]),
+        st.sampled_from(sorted(SLO_CLASSES)),
+        st.sampled_from([0.5, 1.0, 2.0]))
+
+
+def fleet_cells(horizon_s: float = 60.0, with_failures: bool = False,
+                ) -> "st.SearchStrategy":
+    """Valid multi-tenant fleet cells over every registered admission
+    policy; optionally carrying a drawn (enabled) cell-level fault
+    model. The fleet is quantized (CPU spin-up forced to 1 s) to stay
+    on the exactness grid."""
+    fail = (failure_specs() if with_failures else st.just(None))
+    return st.builds(
+        lambda tenants, adm, fleet, f: FleetCell(
+            tenants=tuple(tenants), admission=adm,
+            fleet=fleet.replace(cpu=fleet.cpu.replace(spin_up_s=1.0)),
+            horizon_s=horizon_s, failures=f),
+        st.lists(tenant_specs(horizon_s), min_size=1, max_size=4),
+        st.sampled_from(admission_policy_names()), fleets(), fail)
