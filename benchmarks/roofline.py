@@ -140,22 +140,31 @@ MINPLUS_NS = (128, 512, 2048, 8192)
 
 
 def minplus_scaling(ns=MINPLUS_NS, reps: int = 3) -> list[dict]:
-    """Dense vs structured min-plus transition wall time per step.
+    """Dense vs structured vs Pallas-kernel min-plus transition wall
+    time per step.
 
     One jitted step per (backend, N), timed post-compile (best of
     ``reps``), on a random monotone y_c instance — the same contraction
     the DP runs T times per solve, so the dense/structured ratio here is
-    the per-interval speedup behind fig2."""
+    the per-interval speedup behind fig2. The "kernel" backend is the
+    structured Pallas kernel in whatever execution mode
+    `repro.kernels.backend.pallas_mode` probes on this host; the mode
+    rides in every row (``pallas_mode``) so an interpret-mode number is
+    never mistaken for a compiled-kernel one."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.core.dp import minplus_step_jnp, minplus_step_structured
+    from repro.kernels.backend import pallas_mode
+    from repro.kernels.minplus.ops import minplus_step_structured as _k
 
     backends = {"dense": jax.jit(minplus_step_jnp),
                 "structured": jax.jit(
                     lambda F, p, c, co: minplus_step_structured(
-                        F, p, c, co, check=False))}
+                        F, p, c, co, check=False)),
+                "kernel": jax.jit(_k)}
+    mode = pallas_mode()
     rows = []
     for n in ns:
         rng = np.random.default_rng(n)
@@ -163,7 +172,7 @@ def minplus_scaling(ns=MINPLUS_NS, reps: int = 3) -> list[dict]:
         ycp = jnp.asarray(np.sort(rng.integers(0, n, n))[::-1], jnp.float32)
         ycc = jnp.asarray(np.sort(rng.integers(0, n, n))[::-1], jnp.float32)
         coeffs = (500.0, 5.0, 0.75, 0.75)
-        row = {"kind": "minplus", "n": n}
+        row = {"kind": "minplus", "n": n, "pallas_mode": mode}
         for name, fn in backends.items():
             out, arg = fn(F, ycp, ycc, coeffs)          # compile + warm
             out.block_until_ready()

@@ -1,8 +1,7 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-Three kernels, each with the standard layout (<name>.py kernel with
-pl.pallas_call + explicit BlockSpec VMEM tiling; ops.py jit'd wrapper with
-interpret-mode fallback on CPU; ref.py pure-jnp oracle):
+Four kernels, each with the standard layout (<name>.py kernel with
+pl.pallas_call; ops.py jit'd wrapper; ref.py pure-jnp oracle):
 
   minplus/        min-plus DP transition for the pareto-optimal scheduler
                   (transition matrix generated in-registers: O(N^2) compute
@@ -11,4 +10,13 @@ interpret-mode fallback on CPU; ref.py pure-jnp oracle):
                   (the simulator's per-interval hot loop)
   decode_attn/    GQA flash-decode attention with online softmax over KV
                   blocks (the serving engine's hot-spot)
+  arrival/        the batched DES arrival step (three-reduction dispatch
+                  core + worker-table update) fused into one kernel;
+                  selected per-sweep via arrival_backend=("xla"|"pallas")
+
+backend.py owns execution-mode selection: `pallas_mode()` probes
+whether this host can compile Pallas (mosaic on TPU, triton on GPU)
+and falls back to interpret mode otherwise; `REPRO_PALLAS_MODE`
+overrides. Every ops.py wrapper routes through it instead of assuming
+interpret=True.
 """

@@ -1,0 +1,12 @@
+"""Fused DES arrival-block kernel (Pallas) + its reference oracle.
+
+Trust order (docs/architecture.md): serial `EventSim` oracle > XLA
+batched arrival path (== `ref.arrival_block_ref`) > this kernel. The
+kernel is only ever selected explicitly via ``arrival_backend="pallas"``
+/ ``BENCH_ARRIVAL_BACKEND=pallas``; the default engine path stays XLA.
+"""
+
+from repro.kernels.arrival.ops import (arrival_block, arrival_block_pallas,
+                                       arrival_block_ref)
+
+__all__ = ["arrival_block", "arrival_block_pallas", "arrival_block_ref"]

@@ -1,0 +1,148 @@
+"""Pallas DES arrival-block kernel: one call per arrival block.
+
+The batched DES (`repro.sim.events_batched`) loses to the serial Python
+oracle on few-core CPU hosts because each arrival's dispatch —
+`_find_candidates`' three stacked reductions (ready/pending/deadline
+argmin groups with wid tie-breaks and the round-robin ring) plus the
+worker-table update of `_arrival_step` — lowers to ~200 separate XLA
+primitives inside a `lax.scan` body, each paying XLA:CPU's ~1us
+per-primitive dispatch tax (ROADMAP item 3, measured in
+results/BENCH_sweep.json ``table9_engine_compare``).
+
+This kernel fuses the WHOLE arrival block into one `pallas_call`: the
+worker table, the per-slot accumulators and the block's arrival times
+live in kernel memory (VMEM on TPU) for all ``B`` arrivals, with a
+`fori_loop` applying the dispatch core + table update per arrival. On a
+compiled Pallas backend (Mosaic/Triton — `repro.kernels.backend`) the
+XLA graph sees ONE call where the scan path saw ``B x ~200``
+primitives; in interpret mode (CPU CI) the body is traced back into XLA
+ops — bit-identical semantics, no fusion win (measured honestly in
+``table9_engine_compare``; see benchmarks/README.md).
+
+Semantics are bit-identical to the engine's scan path BY CONSTRUCTION:
+the per-arrival body calls the engine's own `_arrival_step` /
+`_arrival_fail` (the `kernels.arrival.ref` oracle wraps the same
+functions behind the same signature), and the pack/unpack between the
+`EvCarry` pytree and the kernel's dtype-grouped refs is a pure
+reshuffle. Every op in those bodies is elementwise, a max-reduction or
+an integer sum — no float reassociation — so counters AND energies
+match the XLA path exactly, including under `FailureSpec` injection
+(tests/test_arrival_kernel.py).
+
+Layout notes for compiled backends: refs are dtype-grouped 2-D tables
+(``(8, W)`` f32 / ``(5, W)`` i32 worker columns, flat scalar vectors)
+rather than eleven separate ``(W,)`` refs, and index vectors come from
+`broadcasted_iota`. ``W`` (default 96) is not lane-aligned; Mosaic pads
+the trailing dim to 128 internally, which is acceptable at this size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.ft.failures import FailStatic
+from repro.sim.events_batched import (EvCarry, EventScalars, FailAcc,
+                                      WorkerTable, _arrival_fail,
+                                      _arrival_step)
+
+#: EventScalars fields packed into the kernel's float vector, in field
+#: order: everything up to the uint32 hash seed (the int/bool tail —
+#: f_seed, max_fpgas, allocate — rides separately or not at all).
+_FLOAT_FIELDS = EventScalars._fields[:-3]
+
+
+def _unpack_scalars(esf: jnp.ndarray, seed: jnp.ndarray) -> EventScalars:
+    """Rebuild the traced `EventScalars` from the packed float vector +
+    seed. ``max_fpgas`` / ``allocate`` are allocator-tick knobs — the
+    arrival path never reads them — so constants stand in."""
+    vals = {f: esf[i] for i, f in enumerate(_FLOAT_FIELDS)}
+    return EventScalars(**vals, f_seed=seed, max_fpgas=jnp.int32(0),
+                        allocate=jnp.bool_(False))
+
+
+def pack_carry(c: EvCarry):
+    """`EvCarry` -> dtype-grouped kernel tables: ``(8, W)`` f32 worker
+    columns + per-slot accumulators, ``(5, W)`` i32 columns (alive as
+    i32), ``(10,)`` i32 scalar counters, ``(4,)`` f32 scalar
+    accumulators. Pure reshuffle — exact in both directions."""
+    ws = c.ws
+    wf32 = jnp.stack([ws.alloc_t, ws.ready_at, ws.avail, ws.busy,
+                      ws.crash_t, ws.slow, c.serv_slot, c.miss_slot])
+    wi32 = jnp.stack([ws.wid, ws.level, ws.n_assign, ws.nfail,
+                      ws.alive.astype(jnp.int32)])
+    fl = c.fail
+    si32 = jnp.stack([c.next_wid, c.rr_pos, c.overflow, fl.retries,
+                      fl.failed_spins, fl.crashes, fl.recovered,
+                      fl.fail_misses, fl.dropped, fl.cpu_spins])
+    sf32 = jnp.stack([fl.wasted_j, fl.extra_cost, fl.work_f, fl.work_c])
+    return wf32, wi32, si32, sf32
+
+
+def unpack_carry(wf32, wi32, si32, sf32) -> EvCarry:
+    """Inverse of `pack_carry` (scalars come back 0-d, matching the
+    engine's carry initialisation)."""
+    ws = WorkerTable(wid=wi32[0], alive=wi32[4] != 0, alloc_t=wf32[0],
+                     ready_at=wf32[1], avail=wf32[2], busy=wf32[3],
+                     level=wi32[1], n_assign=wi32[2], crash_t=wf32[4],
+                     slow=wf32[5], nfail=wi32[3])
+    fl = FailAcc(retries=si32[3], failed_spins=si32[4], crashes=si32[5],
+                 recovered=si32[6], fail_misses=si32[7], dropped=si32[8],
+                 cpu_spins=si32[9], wasted_j=sf32[0], extra_cost=sf32[1],
+                 work_f=sf32[2], work_c=sf32[3])
+    return EvCarry(ws=ws, serv_slot=wf32[6], miss_slot=wf32[7],
+                   next_wid=si32[0], rr_pos=si32[1], overflow=si32[2],
+                   fail=fl)
+
+
+def _kernel(esf_ref, seed_ref, code_ref, times_ref, wf_ref, wi_ref, si_ref,
+            sf_ref, wf_o, wi_o, si_o, sf_o, *, w_f: int, n_arrivals: int,
+            fstat: FailStatic):
+    es = _unpack_scalars(esf_ref[:], seed_ref[0])
+    code = code_ref[0]
+    c = unpack_carry(wf_ref[:], wi_ref[:], si_ref[:], sf_ref[:])
+    W = wf_ref.shape[-1]
+    is_f = jax.lax.broadcasted_iota(jnp.int32, (W,), 0) < w_f
+    idxW = jax.lax.broadcasted_iota(jnp.float32, (W,), 0)
+    times = times_ref[:]
+
+    def step(i, cc):
+        t = times[i]
+        if fstat.enabled:
+            return _arrival_fail(es, fstat, code, w_f, is_f, idxW, cc, t)
+        return _arrival_step(es, code, w_f, is_f, idxW, cc, t)
+
+    c = jax.lax.fori_loop(0, n_arrivals, step, c)
+    wf, wi, si, sf = pack_carry(c)
+    wf_o[:] = wf
+    wi_o[:] = wi
+    si_o[:] = si
+    sf_o[:] = sf
+
+
+def arrival_block_pallas(es: EventScalars, fstat: FailStatic, code,
+                         w_f: int, c: EvCarry, times: jnp.ndarray,
+                         interpret: bool = True) -> EvCarry:
+    """Run one arrival block (``times``: (B,) f32, +inf-padded) through
+    the fused kernel. Drop-in for `kernels.arrival.ref.arrival_block_ref`
+    (and hence for the engine's inner arrival scan)."""
+    B = times.shape[0]
+    W = c.serv_slot.shape[0]
+    esf = jnp.stack([jnp.asarray(getattr(es, f), jnp.float32)
+                     for f in _FLOAT_FIELDS])
+    seed = jnp.reshape(jnp.asarray(es.f_seed, jnp.uint32), (1,))
+    code1 = jnp.reshape(jnp.asarray(code, jnp.int32), (1,))
+    wf32, wi32, si32, sf32 = pack_carry(c)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, w_f=w_f, n_arrivals=B, fstat=fstat),
+        out_shape=[jax.ShapeDtypeStruct((8, W), jnp.float32),
+                   jax.ShapeDtypeStruct((5, W), jnp.int32),
+                   jax.ShapeDtypeStruct((10,), jnp.int32),
+                   jax.ShapeDtypeStruct((4,), jnp.float32)],
+        interpret=interpret,
+    )(esf, seed, code1, jnp.asarray(times, jnp.float32),
+      wf32, wi32, si32, sf32)
+    return unpack_carry(*outs)

@@ -1,0 +1,30 @@
+"""Dispatch layer for the arrival-block kernel.
+
+`arrival_block` is what the engines call (lazily, from
+`repro.sim.events_batched._simulate_one` and
+`repro.fleet.engine._fleet_arrival` when ``arrival_backend="pallas"``):
+it resolves the Pallas execution mode once per process via
+`repro.kernels.backend` and invokes the kernel in compiled mode where a
+real lowering exists (Mosaic/Triton), interpret mode otherwise.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.ft.failures import FailStatic
+from repro.kernels.arrival.arrival import arrival_block_pallas
+from repro.kernels.arrival.ref import arrival_block_ref
+from repro.kernels.backend import pallas_mode, use_interpret
+from repro.sim.events_batched import EvCarry, EventScalars
+
+__all__ = ["arrival_block", "arrival_block_pallas", "arrival_block_ref",
+           "pallas_mode"]
+
+
+def arrival_block(es: EventScalars, fstat: FailStatic, code, w_f: int,
+                  c: EvCarry, times: jnp.ndarray) -> EvCarry:
+    """Apply one arrival block to the carry via the Pallas kernel, in
+    the best execution mode available on this host."""
+    return arrival_block_pallas(es, fstat, code, w_f, c, times,
+                                interpret=use_interpret())

@@ -1,0 +1,40 @@
+"""Reference oracle for the DES arrival-block kernel.
+
+The semantic ground truth for `kernels.arrival` is the batched engine's
+own arrival path: `repro.sim.events_batched._arrival_step` (pristine)
+and `_arrival_fail` (failure-aware), applied sequentially over one
+fixed-width arrival block by the engine's inner `lax.scan`. This module
+packages exactly that computation behind the kernel's signature, so the
+Pallas kernel has a one-call oracle to be tested against — and so the
+``arrival_backend="xla"`` path and the oracle are literally the same
+code (no drift possible).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.ft.failures import FailStatic
+from repro.sim.events_batched import (EvCarry, EventScalars, _arrival_fail,
+                                      _arrival_step)
+
+
+def arrival_block_ref(es: EventScalars, fstat: FailStatic, code, w_f: int,
+                      c: EvCarry, times: jnp.ndarray) -> EvCarry:
+    """Apply every arrival of one block (``times``: (B,) float32, padded
+    with +inf no-ops) to the carry, in order — the exact `lax.scan` the
+    engine's XLA arrival path runs. ``code`` is the traced dispatch
+    policy code; ``fstat`` the static failure axis."""
+    W = c.serv_slot.shape[0]
+    is_f = jnp.arange(W) < w_f
+    idxW = jnp.arange(W, dtype=jnp.float32)
+
+    def inner(cc, ta):
+        if fstat.enabled:
+            return _arrival_fail(es, fstat, code, w_f, is_f, idxW,
+                                 cc, ta), None
+        return _arrival_step(es, code, w_f, is_f, idxW, cc, ta), None
+
+    c, _ = jax.lax.scan(inner, c, times)
+    return c

@@ -72,8 +72,12 @@ def _kernel(params_ref, f_ref, ycp_ref, ycc_ref, out_ref, arg_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def minplus_pallas(F: jnp.ndarray, yc_prev: jnp.ndarray, yc_cur: jnp.ndarray,
-                   params: jnp.ndarray, interpret: bool = True):
-    """F, yc_prev, yc_cur: (N,) float32; params: (4,) [af, df, ac, dc]."""
+                   params: jnp.ndarray, interpret: bool | None = None):
+    """F, yc_prev, yc_cur: (N,) float32; params: (4,) [af, df, ac, dc].
+    ``interpret=None`` autodetects via `repro.kernels.backend`."""
+    if interpret is None:
+        from repro.kernels.backend import use_interpret
+        interpret = use_interpret()
     n = F.shape[0]
     n_pad = ((n + BLOCK - 1) // BLOCK) * BLOCK
     pad = n_pad - n

@@ -2,21 +2,25 @@
 
 `minplus_step` has the exact signature of the jnp oracle
 (repro.core.dp.minplus_step_jnp) so the DP can swap implementations with a
-flag. On CPU the kernel runs in interpret mode (Python-level execution of
-the kernel body); on TPU it compiles to Mosaic.
+flag. The execution mode is probed, not assumed: wherever
+`repro.kernels.backend.pallas_mode` finds a working compiled lowering
+(Mosaic on TPU, Triton on GPU — or Triton-on-CPU if the runtime grows
+one) the kernels compile; everywhere else they run in interpret mode
+(the kernel body traced as ordinary XLA ops).
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels.backend import use_interpret
 
 from .minplus import minplus_pallas
 from .structured import minplus_structured_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return use_interpret()
 
 
 def _pack(coeffs) -> jnp.ndarray:

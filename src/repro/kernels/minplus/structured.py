@@ -143,9 +143,15 @@ def _kernel(params_ref, f_ref, ycp_ref, ycc_ref, out_ref, arg_ref, *,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def minplus_structured_pallas(F: jnp.ndarray, yc_prev: jnp.ndarray,
                               yc_cur: jnp.ndarray, params: jnp.ndarray,
-                              interpret: bool = True):
+                              interpret: bool | None = None):
     """F, yc_prev, yc_cur: (N,) float32 with both y_c non-increasing;
-    params: (4,) [af, df, ac, dc]. Returns (out, argmin) like the oracle."""
+    params: (4,) [af, df, ac, dc]. Returns (out, argmin) like the oracle.
+    ``interpret=None`` autodetects: compiled where the probed
+    `repro.kernels.backend.pallas_mode` is Mosaic/Triton, interpret
+    fallback otherwise."""
+    if interpret is None:
+        from repro.kernels.backend import use_interpret
+        interpret = use_interpret()
     n = F.shape[0]
     n_pad = ((n + BLOCK - 1) // BLOCK) * BLOCK
     pad = n_pad - n

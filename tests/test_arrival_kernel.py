@@ -1,0 +1,310 @@
+"""Equivalence suite for the fused Pallas arrival kernel.
+
+Trust order (docs/architecture.md): serial `EventSim` oracle > XLA
+batched arrival path > `repro.kernels.arrival`. The kernel therefore
+gets TWO independent checks:
+
+  * block level — `arrival_block_pallas` vs `arrival_block_ref` (the
+    engine's own `lax.scan` over `_arrival_step`/`_arrival_fail`) must
+    be bit-identical on EVERY carry leaf, across dispatch policies,
+    failure modes and dyadic/continuous streams;
+  * engine level — the whole batched engine with
+    ``arrival_backend="pallas"`` must be bit-identical to
+    ``arrival_backend="xla"`` (all totals, including energies: the
+    arrival path has no float reassociation) and exact vs the serial
+    oracle on quantized instances — the same contract
+    tests/test_events_batched.py pins for the XLA path.
+
+The fleet engine's length-1-block kernel path gets the same engine-level
+treatment (totals + per-tenant rows). Everything here runs the kernel in
+interpret mode on CPU CI hosts (`repro.kernels.backend` probes the
+mode); the semantics are mode-independent by construction.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_shim import given, settings
+
+from strategies import event_cells, fleet_cells
+
+from repro.ft.failures import FailureSpec, fail_static
+from repro.kernels.arrival.arrival import (arrival_block_pallas, pack_carry,
+                                           unpack_carry)
+from repro.kernels.arrival.ref import arrival_block_ref
+from repro.sim.events import DISPATCHERS, simulate_events
+from repro.sim.events_batched import (ARRIVAL_BACKENDS, EvCarry, WorkerTable,
+                                      _fail_zero, resolve_arrival_backend,
+                                      simulate_events_batched)
+from repro.sim.exec import _event_args
+from repro.sim.plan import plan_events, plan_fleet
+from repro.sim.sweep import EventCell, sweep_events
+from test_events_batched import (CLOSE_FIELDS, EXACT_FIELDS, HORIZON, QFLEET,
+                                 bursty_trace)
+
+FAIL_SPEC = FailureSpec(spinup_fail_p=0.25, crash_p=0.0625,
+                        straggler_frac=0.25, straggler_factor=2.0,
+                        max_retries=2, max_failover=2, retry_backoff_s=2.0,
+                        seed=7)
+
+
+def _carry0(W: int) -> EvCarry:
+    """The engine's arrival-carry initialisation (`_simulate_one`)."""
+    zf = lambda *s: jnp.zeros(s, jnp.float32)
+    ws = WorkerTable(wid=jnp.zeros((W,), jnp.int32),
+                     alive=jnp.zeros((W,), bool), alloc_t=zf(W),
+                     ready_at=zf(W), avail=zf(W), busy=zf(W),
+                     level=jnp.zeros((W,), jnp.int32),
+                     n_assign=jnp.zeros((W,), jnp.int32),
+                     crash_t=jnp.full((W,), jnp.inf, jnp.float32),
+                     slow=jnp.ones((W,), jnp.float32),
+                     nfail=jnp.zeros((W,), jnp.int32))
+    return EvCarry(ws, zf(W), zf(W), jnp.int32(0), jnp.int32(0),
+                   jnp.int32(0), _fail_zero())
+
+
+def _cell_block_inputs(cell, w_fpga=16, w_cpu=32):
+    """(es, fstat, code, w_f, times-matrix) for one planned cell."""
+    plan = plan_events([cell], n_max=64, w_fpga=w_fpga, w_cpu=w_cpu)
+    d = plan.dispatches[0]
+    es, codes, times, _, _ = _event_args(d)
+    es0 = jax.tree.map(lambda a: a[0], es)
+    return es0, d.static[3], codes[0], d.static[1], times[0]
+
+
+def assert_blocks_bitmatch(cell, n_blocks=4):
+    """Chain the first ``n_blocks`` arrival blocks through ref and
+    kernel from the same initial carry; every leaf must match exactly
+    after every block."""
+    es, fstat, code, w_f, times = _cell_block_inputs(cell)
+    W = 16 + 32
+    cr = cp = _carry0(W)
+    for b in range(min(n_blocks, times.shape[0])):
+        cr = arrival_block_ref(es, fstat, code, w_f, cr, times[b])
+        cp = arrival_block_pallas(es, fstat, code, w_f, cp, times[b],
+                                  interpret=True)
+        for (path, a), (_, b2) in zip(
+                jax.tree_util.tree_leaves_with_path(cr),
+                jax.tree_util.tree_leaves_with_path(cp)):
+            assert bool(jnp.array_equal(a, b2, equal_nan=True)), \
+                f"block {b} leaf {jax.tree_util.keystr(path)}: " \
+                f"ref={a} pallas={b2}"
+
+
+# ------------------------------------------------------------ block level
+
+@pytest.mark.parametrize("disp", DISPATCHERS)
+@pytest.mark.parametrize("failures", [None, FAIL_SPEC],
+                         ids=["pristine", "failures"])
+def test_block_bitmatch_dyadic(disp, failures):
+    """All 3 dispatch policies x failure modes on the quantized grid."""
+    cell = EventCell(disp, bursty_trace(0), 1.0, QFLEET,
+                     horizon_s=HORIZON, failures=failures)
+    assert_blocks_bitmatch(cell)
+
+
+@pytest.mark.parametrize("disp", DISPATCHERS)
+def test_block_bitmatch_continuous(disp):
+    """Continuous (non-dyadic) arrival times and size: the kernel must
+    still be BIT-identical to the ref scan — both paths run the same
+    float32 ops in the same order, ties and all."""
+    rng = np.random.default_rng(3)
+    arr = np.sort(rng.uniform(0.0, HORIZON, 300))
+    cell = EventCell(disp, arr, 0.7310585, QFLEET, horizon_s=HORIZON)
+    assert_blocks_bitmatch(cell)
+
+
+def test_block_bitmatch_continuous_failures():
+    rng = np.random.default_rng(4)
+    arr = np.sort(rng.uniform(0.0, HORIZON, 300))
+    cell = EventCell("spork", arr, 0.7310585, QFLEET, horizon_s=HORIZON,
+                     failures=FAIL_SPEC)
+    assert_blocks_bitmatch(cell)
+
+
+def test_pack_unpack_roundtrip():
+    """The carry <-> kernel-table reshuffle is lossless (dtypes, shapes
+    and values; inf crash times and bool alive included)."""
+    c = _carry0(48)
+    c = c._replace(next_wid=jnp.int32(5), rr_pos=jnp.int32(2),
+                   ws=c.ws._replace(
+                       alive=jnp.arange(48) % 3 == 0,
+                       busy=jnp.arange(48, dtype=jnp.float32) * 0.25))
+    c2 = unpack_carry(*pack_carry(c))
+    for (path, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(c),
+                                 jax.tree_util.tree_leaves_with_path(c2)):
+        assert a.dtype == b.dtype, jax.tree_util.keystr(path)
+        assert bool(jnp.array_equal(a, b, equal_nan=True)), \
+            jax.tree_util.keystr(path)
+
+
+# ----------------------------------------------------------- engine level
+
+def _run_both(arr, size, disp, failures=None):
+    kw = dict(dispatcher=disp, horizon_s=HORIZON, n_max=64, w_fpga=16,
+              w_cpu=32, failures=failures)
+    x = simulate_events_batched(arr, size, QFLEET, arrival_backend="xla",
+                                **kw)
+    p = simulate_events_batched(arr, size, QFLEET, arrival_backend="pallas",
+                                **kw)
+    for f in EXACT_FIELDS + CLOSE_FIELDS:
+        assert getattr(x, f) == getattr(p, f), \
+            f"{f}: xla={getattr(x, f)} pallas={getattr(p, f)}"
+    return x, p
+
+
+@pytest.mark.parametrize("disp", DISPATCHERS)
+@pytest.mark.parametrize("failures", [None, FAIL_SPEC],
+                         ids=["pristine", "failures"])
+def test_engine_xla_vs_pallas_bitmatch(disp, failures):
+    """Full engine, kernel path vs native path: every total (counters
+    AND energies) identical — the kernel changes execution, not math."""
+    _run_both(bursty_trace(1), 1.0, disp, failures)
+
+
+@pytest.mark.parametrize("disp", DISPATCHERS)
+def test_engine_pallas_vs_serial_oracle(disp):
+    """Kernel path vs the serial `EventSim` ground truth on the
+    quantized exactness grid: the oracle contract must survive the
+    second engine swap too."""
+    arr = bursty_trace(2)
+    _, p = _run_both(arr, 1.0, disp)
+    a = simulate_events(arr, 1.0, QFLEET, dispatcher=disp,
+                        horizon_s=HORIZON, n_max=64)
+    for f in EXACT_FIELDS:
+        assert getattr(a, f) == getattr(p, f), \
+            f"{f}: oracle={getattr(a, f)} pallas={getattr(p, f)}"
+    for f in CLOSE_FIELDS:
+        np.testing.assert_allclose(getattr(p, f), getattr(a, f),
+                                   rtol=1e-5, atol=1e-3, err_msg=f)
+
+
+def test_engine_pallas_continuous_stream():
+    rng = np.random.default_rng(5)
+    arr = np.sort(rng.uniform(0.0, HORIZON, 400))
+    for disp in DISPATCHERS:
+        _run_both(arr, 0.7310585, disp)
+
+
+# ------------------------------------------------------- property tests
+
+@given(cell=event_cells(horizon_s=60.0, with_failures=False))
+@settings(max_examples=6, deadline=None)
+def test_property_event_cells_bitmatch(cell):
+    r = sweep_events([cell], n_max=64, w_fpga=16, w_cpu=32,
+                     arrival_backend="xla")
+    p = sweep_events([cell], n_max=64, w_fpga=16, w_cpu=32,
+                     arrival_backend="pallas")
+    for f in EXACT_FIELDS + CLOSE_FIELDS:
+        assert getattr(r[0], f) == getattr(p[0], f), f
+
+
+@given(cell=event_cells(horizon_s=60.0, with_failures=True))
+@settings(max_examples=6, deadline=None)
+def test_property_event_cells_bitmatch_failures(cell):
+    r = sweep_events([cell], n_max=64, w_fpga=16, w_cpu=32,
+                     arrival_backend="xla")
+    p = sweep_events([cell], n_max=64, w_fpga=16, w_cpu=32,
+                     arrival_backend="pallas")
+    for f in EXACT_FIELDS + CLOSE_FIELDS:
+        assert getattr(r[0], f) == getattr(p[0], f), f
+
+
+@given(cell=fleet_cells(horizon_s=60.0, with_failures=False))
+@settings(max_examples=4, deadline=None)
+def test_property_fleet_cells_bitmatch(cell):
+    from repro.sim.sweep import sweep_fleet
+    r = sweep_fleet([cell], n_max=64, w_fpga=16, w_cpu=32,
+                    arrival_backend="xla")
+    p = sweep_fleet([cell], n_max=64, w_fpga=16, w_cpu=32,
+                    arrival_backend="pallas")
+    for f in EXACT_FIELDS + CLOSE_FIELDS:
+        assert getattr(r.totals()[0], f) == getattr(p.totals()[0], f), f
+    assert list(r.tenants(0)) == list(p.tenants(0))
+
+
+# ----------------------------------------------------- fleet engine level
+
+def test_fleet_engine_bitmatch_with_failures():
+    from test_fleet import dyadic_tenants
+    from repro.fleet import FleetCell
+    from repro.sim.sweep import sweep_fleet
+    cells = [FleetCell(tenants=dyadic_tenants(seed=3),
+                       admission="token_bucket", dispatcher="spork",
+                       fleet=QFLEET, horizon_s=60.0),
+             FleetCell(tenants=dyadic_tenants(seed=5, n_arr=200),
+                       admission="token_bucket", fleet=QFLEET,
+                       horizon_s=60.0, failures=FAIL_SPEC)]
+    r = sweep_fleet(cells, n_max=64, w_fpga=16, w_cpu=32,
+                    arrival_backend="xla")
+    p = sweep_fleet(cells, n_max=64, w_fpga=16, w_cpu=32,
+                    arrival_backend="pallas")
+    for i in range(len(cells)):
+        for f in EXACT_FIELDS + CLOSE_FIELDS:
+            assert getattr(r.totals()[i], f) == getattr(p.totals()[i], f), \
+                (i, f)
+        assert list(r.tenants(i)) == list(p.tenants(i))
+
+
+# ------------------------------------------------------ plumbing contract
+
+def test_arrival_backend_in_chunk_statics():
+    """The selector must ride in every dispatch's static tuple (that is
+    what reaches both exec backends and the checkpoint fingerprint)."""
+    cell = EventCell("spork", bursty_trace(0), 1.0, QFLEET,
+                     horizon_s=HORIZON)
+    for ab in ARRIVAL_BACKENDS:
+        plan = plan_events([cell], n_max=64, w_fpga=16, w_cpu=32,
+                           arrival_backend=ab)
+        assert all(d.static[-1] == ab for d in plan.dispatches)
+    from test_fleet import dyadic_tenants
+    from repro.fleet import FleetCell
+    fcell = FleetCell(tenants=dyadic_tenants(seed=1), fleet=QFLEET,
+                      horizon_s=60.0)
+    plan = plan_fleet([fcell], n_max=64, w_fpga=16, w_cpu=32,
+                      arrival_backend="pallas")
+    assert all(d.static[-1] == "pallas" for d in plan.dispatches)
+
+
+def test_arrival_backend_fingerprints_differ():
+    """xla and pallas chunks must never share a checkpoint entry."""
+    from repro.sim.harness import chunk_fingerprint
+    cell = EventCell("spork", bursty_trace(0), 1.0, QFLEET,
+                     horizon_s=HORIZON)
+    fps = set()
+    for ab in ARRIVAL_BACKENDS:
+        plan = plan_events([cell], n_max=64, w_fpga=16, w_cpu=32,
+                           arrival_backend=ab)
+        fps.add(chunk_fingerprint(plan.dispatches[0], "local"))
+    assert len(fps) == len(ARRIVAL_BACKENDS)
+
+
+def test_resolve_arrival_backend(monkeypatch):
+    from repro.sim.events_batched import ARRIVAL_ENV
+    monkeypatch.delenv(ARRIVAL_ENV, raising=False)
+    assert resolve_arrival_backend(None) == "xla"
+    assert resolve_arrival_backend("pallas") == "pallas"
+    monkeypatch.setenv(ARRIVAL_ENV, "pallas")
+    assert resolve_arrival_backend(None) == "pallas"
+    assert resolve_arrival_backend("xla") == "xla"
+    with pytest.raises(ValueError):
+        resolve_arrival_backend("mosaic")
+
+
+def test_pallas_mode_interpret_override(monkeypatch):
+    """REPRO_PALLAS_MODE=interpret pins the probe (the CI kernels job
+    relies on this to test the emulated path deterministically)."""
+    from repro.kernels import backend as kb
+    monkeypatch.setenv(kb.ENV_VAR, "interpret")
+    kb.pallas_mode.cache_clear()
+    try:
+        assert kb.pallas_mode() == "interpret"
+        assert kb.use_interpret() is True
+    finally:
+        kb.pallas_mode.cache_clear()
